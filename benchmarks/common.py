@@ -1,0 +1,98 @@
+"""Shared benchmark machinery: the paper's Table-9 experiment grid.
+
+Task sets (Table 9): t in {1, 5, 30, 60}s with T_job fixed at 240 s per
+processor (n = 240/t), P = 1408 single-slot nodes. Each (scheduler, set) is
+run `trials` times; results cached to experiments/bench_cache.json so the
+figure benchmarks reuse one simulation pass.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (  # noqa: E402
+    FAMILIES, Job, ResourceManager, Scheduler, aggregate)
+from repro.core.multilevel import MultilevelConfig  # noqa: E402
+
+P = 1408
+TASK_SETS: Tuple[Tuple[str, float, int], ...] = (
+    # (name, task time t, tasks/processor n)
+    ("rapid", 1.0, 240),
+    ("fast", 5.0, 48),
+    ("medium", 30.0, 8),
+    ("long", 60.0, 4),
+)
+SCHEDULERS = ("slurm", "grid_engine", "mesos", "yarn")
+TRIALS = int(os.environ.get("BENCH_TRIALS", "3"))
+CACHE = Path(__file__).resolve().parent.parent / "experiments" / "bench_cache.json"
+
+
+def run_taskset(family: str, n: int, t: float, multilevel: bool = False,
+                seed: int = 0) -> Dict:
+    """One Table-9 run; returns T_total, Delta-T and utilization."""
+    prof = FAMILIES[family]
+    rm = ResourceManager()
+    rm.add_nodes(P, slots=1)
+    s = Scheduler(rm, profile=prof)
+    job = Job.array(n * P, duration=t, name=f"{family}-{n}-{t}")
+    if multilevel:
+        job = aggregate(job, slots=P, cfg=MultilevelConfig(mode="mimo"))
+    s.submit(job)
+    s.run()
+    st = s.stats[job.job_id]
+    T_total = st.last_end - st.submit_time
+    T_job = t * n               # isolated per-processor work (original tasks)
+    return {
+        "family": family, "n": n, "t": t, "multilevel": multilevel,
+        "T_total": T_total, "T_job": T_job, "delta_t": T_total - T_job,
+        "utilization": T_job / T_total,
+    }
+
+
+def _key(family, n, t, multilevel, trial):
+    return f"{family}|{n}|{t}|{int(multilevel)}|{trial}"
+
+
+def load_cache() -> Dict:
+    if CACHE.exists():
+        return json.loads(CACHE.read_text())
+    return {}
+
+
+def save_cache(cache: Dict) -> None:
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    CACHE.write_text(json.dumps(cache))
+
+
+def all_results(multilevel: bool = False, trials: int = TRIALS,
+                schedulers=SCHEDULERS) -> List[Dict]:
+    """Full grid with caching. Skips YARN rapid (paper: 'exceedingly long')
+    in non-multilevel mode, exactly as Table 9 does."""
+    cache = load_cache()
+    out = []
+    dirty = False
+    for fam in schedulers:
+        for name, t, n in TASK_SETS:
+            if fam == "yarn" and name == "rapid" and not multilevel:
+                continue   # Table 9 footnote: not executed
+            for trial in range(trials):
+                k = _key(fam, n, t, multilevel, trial)
+                if k not in cache:
+                    # trial index varies the seed only; sim is deterministic,
+                    # so re-trials confirm determinism (paper's 3 trials
+                    # bound measurement noise; ours bound nothing but keep
+                    # the protocol shape)
+                    cache[k] = run_taskset(fam, n, t, multilevel, seed=trial)
+                    dirty = True
+                r = dict(cache[k])
+                r["trial"] = trial
+                r["set"] = name
+                out.append(r)
+    if dirty:
+        save_cache(cache)
+    return out

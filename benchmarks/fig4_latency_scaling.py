@@ -1,0 +1,31 @@
+"""Paper Fig. 4: Delta-T vs n (tasks per processor), log-log, per scheduler,
+with the fitted power-law overlay."""
+import numpy as np
+
+from benchmarks.common import SCHEDULERS, all_results
+from repro.core import fit_power_law
+
+
+def run(quiet: bool = False):
+    results = all_results(multilevel=False)
+    print("# Fig 4 reproduction: Delta-T vs n per scheduler (log-log data)")
+    print("scheduler,n,delta_t_mean_s,delta_t_min_s,delta_t_max_s,model_fit_s")
+    out = {}
+    for fam in SCHEDULERS:
+        rows = [r for r in results if r["family"] == fam]
+        by_n = {}
+        for r in rows:
+            by_n.setdefault(r["n"], []).append(r["delta_t"])
+        ns = sorted(by_n)
+        dts = [float(np.mean(by_n[n])) for n in ns]
+        fit = fit_power_law(ns, dts)
+        for n in ns:
+            vals = by_n[n]
+            print(f"{fam},{n},{np.mean(vals):.2f},{min(vals):.2f},"
+                  f"{max(vals):.2f},{fit.t_s * n ** fit.alpha_s:.2f}")
+        out[fam] = (ns, dts, fit)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Roofline report: per (arch x shape x mesh) compute/memory/collective terms
+from the dry-run artifacts (experiments/dryrun/*.json).
+
+Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per link. The dominant term is the bottleneck; `useful_ratio` is
+MODEL_FLOPS / HLO_FLOPs per device (remat/dispatch waste shows up here).
+"""
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_cells(tag: str = ""):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        parts = p.stem.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def run(quiet: bool = False, tag: str = ""):
+    cells = load_cells(tag)
+    print("# Roofline table (per-device terms, seconds per step)")
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,hbm_args_gb")
+    rows = []
+    for c in cells:
+        if c["status"] != "ok":
+            print(f"{c['arch']},{c['shape']},{c['mesh']},{c['status']},,,,,,")
+            continue
+        t = c["roofline"]
+        mem_gb = c["memory"]["argument_bytes"] / 2 ** 30
+        print(f"{c['arch']},{c['shape']},{c['mesh']},ok,"
+              f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+              f"{t['collective_s']:.4g},{c['dominant']},"
+              f"{c['useful_flops_ratio']:.3f},{mem_gb:.2f}")
+        rows.append(c)
+    if rows and not quiet:
+        worst = min(
+            (r for r in rows if r["shape"].startswith("train")),
+            key=lambda r: _roofline_fraction(r))
+        print(f"# worst train-cell roofline fraction: {worst['arch']} "
+              f"{worst['shape']} {worst['mesh']} "
+              f"frac={_roofline_fraction(worst):.3f}")
+    return rows
+
+
+def _roofline_fraction(cell) -> float:
+    """Fraction of roofline achieved: ideal-compute-time / bound-time."""
+    t = cell["roofline"]
+    ideal = cell["model_flops_per_device"] / 197e12
+    bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return ideal / bound if bound else 0.0
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(tag=sys.argv[1] if len(sys.argv) > 1 else "")

@@ -1,0 +1,19 @@
+"""Paper Table 9: runtimes of the four constant-time task sets on the four
+schedulers (1408 cores, 3 trials)."""
+from benchmarks.common import TASK_SETS, all_results
+
+
+def run(quiet: bool = False):
+    results = all_results(multilevel=False)
+    rows = []
+    print("# Table 9 reproduction: total runtimes (s), 3 trials")
+    print("scheduler,set,t,n,trial,T_total_s,delta_t_s,utilization")
+    for r in results:
+        print(f"{r['family']},{r['set']},{r['t']},{r['n']},{r['trial']},"
+              f"{r['T_total']:.1f},{r['delta_t']:.1f},{r['utilization']:.4f}")
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

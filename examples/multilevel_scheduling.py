@@ -1,0 +1,72 @@
+"""LLMapReduce example: a real map-reduce analytics job (word-histogram over
+synthetic shards) executed through the scheduler with and without multilevel
+aggregation — real Python payloads, real executor threads, one DAG.
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    FAMILIES, Job, JobState, ResourceManager, Scheduler, map_reduce)
+from repro.core.executor import InlineExecutor  # noqa: E402
+from repro.core.multilevel import MultilevelConfig  # noqa: E402
+
+N_SHARDS = 256
+SLOTS = 16
+
+
+def make_payloads():
+    rng = np.random.default_rng(0)
+    shards = [rng.integers(0, 100, size=2000) for _ in range(N_SHARDS)]
+    results = {}
+
+    def mapper(i):
+        def work():
+            h = np.bincount(shards[i], minlength=100)
+            results[i] = h
+            return h
+        return work
+
+    return [mapper(i) for i in range(N_SHARDS)], results, shards
+
+
+def main():
+    payloads, results, shards = make_payloads()
+    expected = np.sum([np.bincount(s, minlength=100) for s in shards], axis=0)
+
+    # multilevel map-reduce through the scheduler with REAL payloads
+    rm = ResourceManager()
+    rm.add_nodes(SLOTS, slots=1)
+    execu = InlineExecutor()
+    sched = Scheduler(rm, profile=FAMILIES["inproc"], executor=execu)
+    final = {}
+
+    def reducer():
+        final["hist"] = np.sum([results[i] for i in range(N_SHARDS)], axis=0)
+        return final["hist"]
+
+    jobs = map_reduce(
+        n_tasks=N_SHARDS, task_duration=0.0, slots=SLOTS,
+        payloads=payloads, reduce_payload=reducer, reduce_duration=0.0,
+        cfg=MultilevelConfig(mode="mimo"))
+    t0 = time.time()
+    for j in jobs:
+        sched.submit(j)
+    sched.run()
+    dt = time.time() - t0
+    mappers, red = jobs
+    assert mappers.state is JobState.COMPLETED
+    assert red.state is JobState.COMPLETED
+    np.testing.assert_array_equal(final["hist"], expected)
+    print(f"map-reduce over {N_SHARDS} shards on {SLOTS} slots: "
+          f"{mappers.n_tasks} bundled mappers + 1 reducer, {dt:.2f}s wall")
+    print(f"  histogram total = {final['hist'].sum()} (verified correct)")
+    print("  DAG dependency held: reducer ran after all mappers")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serving example: batched requests through the continuous-batching engine,
+showing the paper's multilevel-scheduling effect on a real model.
+
+Compares (a) one-request-at-a-time decoding (per-task dispatch, the paper's
+Case 2: t ~< t_s) against (b) continuous batching (mimo aggregation): same
+outputs, far fewer dispatches, higher throughput.
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving import ServeRequest, ServingEngine  # noqa: E402
+
+N_REQ, PROMPT, NEW = 16, 10, 12
+
+
+def main():
+    cfg = get_smoke_config("gemma_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, PROMPT))
+               for _ in range(N_REQ)]
+
+    # (a) serial: lanes=1 — every request is its own dispatch stream
+    eng1 = ServingEngine(cfg, params, lanes=1, max_len=64)
+    reqs1 = [ServeRequest(prompt=p, max_new_tokens=NEW) for p in prompts]
+    t0 = time.time()
+    s1 = eng1.run(reqs1)
+    t_serial = time.time() - t0
+
+    # (b) continuous batching: lanes=8 — aggregated dispatches
+    eng8 = ServingEngine(cfg, params, lanes=8, max_len=64)
+    reqs8 = [ServeRequest(prompt=p, max_new_tokens=NEW) for p in prompts]
+    t0 = time.time()
+    s8 = eng8.run(reqs8)
+    t_batched = time.time() - t0
+
+    for a, b in zip(reqs1, reqs8):
+        assert a.output == b.output, "batching must not change outputs"
+
+    print(f"{N_REQ} requests x {NEW} new tokens (reduced gemma config)")
+    print(f"  serial (1 lane):      {t_serial:6.2f}s, "
+          f"{s1['decode_steps']} dispatches, "
+          f"{s1['throughput_tok_s']:.1f} tok/s")
+    print(f"  batched (8 lanes):    {t_batched:6.2f}s, "
+          f"{s8['decode_steps']} dispatches, "
+          f"{s8['throughput_tok_s']:.1f} tok/s")
+    print(f"  tokens per dispatch:  {s1['tokens_per_dispatch']:.2f} -> "
+          f"{s8['tokens_per_dispatch']:.2f}  (multilevel aggregation)")
+    print(f"  dispatch reduction:   {s1['decode_steps'] / s8['decode_steps']:.1f}x"
+          f"  (wall {t_serial / t_batched:.2f}x on CPU — on an accelerator a"
+          f" batched decode step costs ~a single-lane step, so the dispatch"
+          f" reduction converts to throughput; see benchmarks/dispatch_latency)")
+    print("  outputs identical: continuous batching is semantics-preserving")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""CodeQwen1.5 7B — dense qwen1.5-arch (full MHA: kv=32).
+
+[hf:Qwen/CodeQwen1.5-7B; hf] 32L d_model=4096 32H (GQA kv=32) d_ff=13440
+vocab=92416.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab_size=92416,
+    act="swiglu",
+    max_seq_len=65536,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="codeqwen-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=521,
+    act="swiglu",
+    max_seq_len=1024,
+)

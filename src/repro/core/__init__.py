@@ -1,0 +1,25 @@
+"""Core: the paper's contribution — scheduler, latency model, multilevel
+scheduling (Reuther et al., JPDC 2017)."""
+from repro.core.families import FAMILIES, GRID_ENGINE, INPROC, MESOS, SLURM, YARN, LatencyProfile
+from repro.core.job import Job, JobState, ResourceRequest, Task, TaskState
+from repro.core.latency_model import (
+    ModelFit, delta_t, fit_power_law, total_runtime, utilization_approx,
+    utilization_constant, utilization_variable)
+from repro.core.multilevel import MultilevelConfig, aggregate, map_reduce
+from repro.core.policies import (
+    BackfillPolicy, BinPackingPolicy, FIFOPolicy, LocalityPolicy, make_policy)
+from repro.core.queues import QueueConfig, QueueManager
+from repro.core.resources import Node, NodeState, ResourceManager
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.simulator import EventLoop
+
+__all__ = [
+    "FAMILIES", "GRID_ENGINE", "INPROC", "MESOS", "SLURM", "YARN",
+    "LatencyProfile", "Job", "JobState", "ResourceRequest", "Task",
+    "TaskState", "ModelFit", "delta_t", "fit_power_law", "total_runtime",
+    "utilization_approx", "utilization_constant", "utilization_variable",
+    "MultilevelConfig", "aggregate", "map_reduce", "BackfillPolicy",
+    "BinPackingPolicy", "FIFOPolicy", "LocalityPolicy", "make_policy",
+    "QueueConfig", "QueueManager", "Node", "NodeState", "ResourceManager",
+    "Scheduler", "SchedulerConfig", "EventLoop",
+]

@@ -1,0 +1,104 @@
+"""Job-execution backends (paper §1 "job execution function").
+
+  SimExecutor     virtual time (the engine schedules end events directly).
+  ThreadExecutor  real wall-clock execution of Python payloads on a worker
+                  pool — used to measure *real* dispatch overheads.
+  JaxDispatchExecutor  payloads are jitted JAX computations; measures real
+                  JAX dispatch latency t_s, and demonstrates multilevel
+                  scheduling as dispatch aggregation (DESIGN.md §2).
+
+Real-time use drives the same EventLoop with wall-deadline semantics: the
+engine's virtual `now` tracks wall time via `sync()`.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, List, Optional
+
+from repro.core.job import Task
+from repro.core.scheduler import Executor
+
+
+class ThreadExecutor(Executor):
+    """Runs task payloads on a pool of worker threads ("slots")."""
+
+    def __init__(self, workers: int = 4):
+        self._q: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+        self._stop = False
+        self.results = {}
+        for _ in range(workers):
+            th = threading.Thread(target=self._worker, daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def _worker(self):
+        while not self._stop:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            task, done = item
+            ok = True
+            try:
+                if task.payload is not None:
+                    self.results[task.key] = task.payload()
+                elif task.duration:
+                    time.sleep(task.duration)
+            except Exception:
+                ok = False
+            done(ok)
+            self._q.task_done()
+
+    def run(self, task: Task, done: Callable[[bool], None]) -> None:
+        self._q.put((task, done))
+
+    def drain(self) -> None:
+        self._q.join()
+
+    def shutdown(self) -> None:
+        self._stop = True
+
+
+class InlineExecutor(Executor):
+    """Runs payloads synchronously in the event loop (deterministic tests)."""
+
+    def __init__(self):
+        self.results = {}
+
+    def run(self, task: Task, done: Callable[[bool], None]) -> None:
+        ok = True
+        try:
+            if task.payload is not None:
+                self.results[task.key] = task.payload()
+        except Exception:
+            ok = False
+        done(ok)
+
+
+class JaxDispatchExecutor(InlineExecutor):
+    """Payloads are JAX computations; blocks until device completion so the
+    measured per-task latency includes real dispatch + execution."""
+
+    def run(self, task: Task, done: Callable[[bool], None]) -> None:
+        ok = True
+        try:
+            if task.payload is not None:
+                out = task.payload()
+                out = _block(out)
+                self.results[task.key] = out
+        except Exception:
+            ok = False
+        done(ok)
+
+
+def _block(out):
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(out)
+    for x in leaves:
+        if hasattr(x, "block_until_ready"):
+            x.block_until_ready()
+    return out

@@ -1,0 +1,149 @@
+"""Job / task data structures: lifecycle states, resource requests, DAGs.
+
+Follows the paper's functional model (§1): jobs enter via the user interface,
+are queued by job-lifecycle management, matched to resources by the
+scheduling function, and dispatched by the job-execution function. A Job is
+either a single task, a *job array* (independent tasks under one id — the
+paper's measurements submit arrays because they "introduce much less
+scheduler latency than individual jobs"), or a *parallel* job (gang: all
+tasks must co-start — the SPMD/TPU case).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"        # submitted, not yet eligible (deps unmet)
+    QUEUED = "queued"          # eligible, waiting for resources
+    RUNNING = "running"        # >=1 task dispatched
+    COMPLETED = "completed"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+class TaskState(enum.Enum):
+    WAITING = "waiting"
+    DISPATCHED = "dispatched"  # scheduler has committed resources
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+    PREEMPTED = "preempted"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class ResourceRequest:
+    """Per-task resource request (static + consumable resources, §3.2.4)."""
+
+    slots: int = 1                 # cpu cores / job slots
+    mem_mb: int = 0
+    accelerators: int = 0          # GPUs/TPU chips on the node
+    licenses: Tuple[str, ...] = ()
+    node_attrs: Dict[str, Any] = field(default_factory=dict)  # constraints
+
+
+@dataclass
+class Task:
+    job_id: int
+    index: int
+    duration: float = 0.0              # simulated runtime (virtual seconds)
+    payload: Optional[Callable] = None  # real work (executor-dependent)
+    request: ResourceRequest = field(default_factory=ResourceRequest)
+    state: TaskState = TaskState.WAITING
+    node_id: Optional[int] = None
+    submit_time: float = 0.0
+    dispatch_time: float = 0.0     # resources committed
+    start_time: float = 0.0        # began executing
+    end_time: float = 0.0
+    attempts: int = 0
+    speculative_of: Optional[int] = None  # straggler-mitigation clone
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.job_id, self.index)
+
+
+_job_ids = itertools.count(1)
+
+
+@dataclass
+class Job:
+    """A job: one task, an array of independent tasks, or a gang-parallel job."""
+
+    name: str = "job"
+    user: str = "user"
+    queue: str = "default"
+    priority: float = 0.0
+    parallel: bool = False            # gang: all tasks co-scheduled
+    tasks: List[Task] = field(default_factory=list)
+    depends_on: Tuple[int, ...] = ()  # job ids (DAG dependencies, §3.2.3)
+    state: JobState = JobState.PENDING
+    submit_time: float = 0.0
+    end_time: float = 0.0
+    job_id: int = field(default_factory=lambda: next(_job_ids))
+    # bookkeeping
+    completed_tasks: int = 0
+    failed_tasks: int = 0
+    n_clones: int = 0                 # speculative clones appended to tasks
+    max_restarts: int = 0             # per-task restart budget (§3.2.7)
+
+    @classmethod
+    def array(cls, n_tasks: int, duration: float = 0.0, *,
+              payloads: Optional[Sequence[Callable]] = None,
+              request: Optional[ResourceRequest] = None,
+              durations: Optional[Sequence[float]] = None,
+              **kw) -> "Job":
+        """A job array of n independent tasks."""
+        job = cls(**kw)
+        for i in range(n_tasks):
+            job.tasks.append(Task(
+                job_id=job.job_id, index=i,
+                duration=durations[i] if durations is not None else duration,
+                payload=payloads[i] if payloads is not None else None,
+                request=request or ResourceRequest()))
+        return job
+
+    @classmethod
+    def parallel_job(cls, n_tasks: int, duration: float = 0.0, *,
+                     request: Optional[ResourceRequest] = None, **kw) -> "Job":
+        job = cls.array(n_tasks, duration, request=request, **kw)
+        job.parallel = True
+        return job
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def n_real_tasks(self) -> int:
+        """Tasks excluding speculative clones (a clone resolves its
+        original's slot in the completion accounting)."""
+        return len(self.tasks) - self.n_clones
+
+    @property
+    def done(self) -> bool:
+        return self.completed_tasks + self.failed_tasks >= self.n_real_tasks
+
+    def pending_tasks(self) -> List[Task]:
+        return [t for t in self.tasks
+                if t.state in (TaskState.WAITING, TaskState.PREEMPTED)]
+
+
+@dataclass
+class JobStats:
+    """Per-job accounting recorded by job-lifecycle management."""
+
+    job_id: int = 0
+    submit_time: float = 0.0
+    first_dispatch: float = 0.0
+    last_end: float = 0.0
+    task_seconds: float = 0.0      # Σ isolated task runtimes (T_job numerator)
+    n_tasks: int = 0
+
+    @property
+    def total_time(self) -> float:
+        return self.last_end - self.submit_time

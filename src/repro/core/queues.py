@@ -1,0 +1,129 @@
+"""Queue management (paper §3.2.2): multiple queues, priorities, fair-share.
+
+Each queue orders its eligible jobs by an effective priority combining the
+job's static priority, submit order (FCFS tiebreak), and a decayed fair-share
+usage penalty per user (§3.2.5 prioritization schema).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.job import Job, JobState
+
+
+@dataclass
+class QueueConfig:
+    name: str = "default"
+    priority: float = 0.0          # queue-level priority boost
+    max_slots: int = 0             # 0 = unlimited
+    fair_share: bool = False
+    fair_share_halflife: float = 3600.0
+
+
+class FairShareLedger:
+    """Exponentially-decayed per-user usage (slot-seconds)."""
+
+    def __init__(self, halflife: float):
+        self.halflife = halflife
+        self.usage: Dict[str, float] = {}
+        self._last_decay = 0.0
+
+    def record(self, user: str, slot_seconds: float, now: float) -> None:
+        self._decay(now)
+        self.usage[user] = self.usage.get(user, 0.0) + slot_seconds
+
+    def penalty(self, user: str, now: float) -> float:
+        self._decay(now)
+        return math.log1p(self.usage.get(user, 0.0))
+
+    def _decay(self, now: float) -> None:
+        dt = now - self._last_decay
+        if dt <= 0:
+            return
+        factor = 0.5 ** (dt / self.halflife)
+        for u in list(self.usage):
+            self.usage[u] *= factor
+        self._last_decay = now
+
+
+class JobQueue:
+    def __init__(self, config: Optional[QueueConfig] = None):
+        self.config = config or QueueConfig()
+        self.jobs: List[Job] = []
+        self.ledger = FairShareLedger(self.config.fair_share_halflife)
+        self.slots_in_use = 0
+
+    def push(self, job: Job) -> None:
+        job.state = JobState.QUEUED
+        self.jobs.append(job)
+
+    def remove(self, job: Job) -> None:
+        if job in self.jobs:
+            self.jobs.remove(job)
+
+    def ordered(self, now: float) -> List[Job]:
+        """Jobs by descending effective priority, FCFS within ties."""
+        def key(j: Job):
+            eff = j.priority + self.config.priority
+            if self.config.fair_share:
+                eff -= self.ledger.penalty(j.user, now)
+            return (-eff, j.submit_time, j.job_id)
+        return sorted(self.jobs, key=key)
+
+    def over_limit(self, extra_slots: int) -> bool:
+        return (self.config.max_slots > 0
+                and self.slots_in_use + extra_slots > self.config.max_slots)
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+
+class QueueManager:
+    """Named queues + DAG dependency gating (PENDING -> QUEUED)."""
+
+    def __init__(self):
+        self.queues: Dict[str, JobQueue] = {"default": JobQueue()}
+        self.jobs: Dict[int, Job] = {}
+        self._finished: Dict[int, JobState] = {}
+
+    def add_queue(self, config: QueueConfig) -> None:
+        self.queues[config.name] = JobQueue(config)
+
+    def submit(self, job: Job, now: float) -> None:
+        job.submit_time = now
+        for t in job.tasks:
+            t.submit_time = now
+        self.jobs[job.job_id] = job
+        if self._deps_met(job):
+            self.queues.setdefault(job.queue, JobQueue()).push(job)
+        else:
+            job.state = JobState.PENDING
+
+    def _deps_met(self, job: Job) -> bool:
+        return all(self._finished.get(d) == JobState.COMPLETED
+                   for d in job.depends_on)
+
+    def job_finished(self, job: Job, state: JobState, now: float) -> List[Job]:
+        """Record terminal state; release newly-eligible dependents."""
+        self._finished[job.job_id] = state
+        job.state = state
+        job.end_time = now
+        released = []
+        for other in self.jobs.values():
+            if other.state is JobState.PENDING and self._deps_met(other):
+                self.queues.setdefault(other.queue, JobQueue()).push(other)
+                released.append(other)
+        return released
+
+    def queued_jobs(self, now: float) -> List[Job]:
+        """All eligible jobs across queues, interleaved by queue order."""
+        out: List[Job] = []
+        for q in self.queues.values():
+            out.extend(q.ordered(now))
+        out.sort(key=lambda j: (-j.priority, j.submit_time, j.job_id))
+        return out
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())

@@ -1,0 +1,162 @@
+"""Resource management function (paper §1, §3.2.4).
+
+Tracks node availability/state from heartbeats, aggregates it for the
+scheduling function, and accounts static (slots, accelerators) and dynamic
+(memory, licenses, load) resources. Supports heterogeneous nodes via
+attribute constraints and administrator-defined resources.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.core.job import ResourceRequest, Task
+
+
+class NodeState(enum.Enum):
+    UP = "up"
+    DOWN = "down"
+    DRAINED = "drained"    # no new work (maintenance / elastic shrink)
+
+
+@dataclass
+class Node:
+    node_id: int
+    slots: int = 1
+    mem_mb: int = 1 << 20
+    accelerators: int = 0
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    state: NodeState = NodeState.UP
+    # dynamic
+    free_slots: int = 0
+    free_mem: int = 0
+    free_accel: int = 0
+    load: float = 0.0
+    last_heartbeat: float = 0.0
+    running: Set[Tuple[int, int]] = field(default_factory=set)
+
+    def __post_init__(self):
+        self.free_slots = self.slots
+        self.free_mem = self.mem_mb
+        self.free_accel = self.accelerators
+
+    def fits(self, req: ResourceRequest) -> bool:
+        if self.state is not NodeState.UP:
+            return False
+        if req.slots > self.free_slots or req.mem_mb > self.free_mem:
+            return False
+        if req.accelerators > self.free_accel:
+            return False
+        return all(self.attrs.get(k) == v for k, v in req.node_attrs.items())
+
+    def allocate(self, task: Task) -> None:
+        r = task.request
+        assert self.fits(r), (self.node_id, task.key)
+        self.free_slots -= r.slots
+        self.free_mem -= r.mem_mb
+        self.free_accel -= r.accelerators
+        self.running.add(task.key)
+
+    def release(self, task: Task) -> None:
+        r = task.request
+        if task.key not in self.running:
+            return
+        self.running.discard(task.key)
+        self.free_slots += r.slots
+        self.free_mem += r.mem_mb
+        self.free_accel += r.accelerators
+
+
+class ResourceManager:
+    """Aggregates node state; the single source of truth for the scheduler."""
+
+    def __init__(self, heartbeat_timeout: float = 30.0):
+        self.nodes: Dict[int, Node] = {}
+        self.licenses: Dict[str, int] = {}
+        self.heartbeat_timeout = heartbeat_timeout
+        self._down_callbacks = []
+
+    # -------------------------------------------------------- topology
+    def add_nodes(self, count: int, slots: int = 1, mem_mb: int = 1 << 20,
+                  accelerators: int = 0, attrs: Optional[Dict] = None) -> List[int]:
+        start = len(self.nodes)
+        ids = []
+        for i in range(start, start + count):
+            self.nodes[i] = Node(i, slots=slots, mem_mb=mem_mb,
+                                 accelerators=accelerators,
+                                 attrs=dict(attrs or {}))
+            ids.append(i)
+        return ids
+
+    def add_license(self, name: str, count: int) -> None:
+        self.licenses[name] = self.licenses.get(name, 0) + count
+
+    # -------------------------------------------------------- dynamics
+    def heartbeat(self, node_id: int, now: float, load: float = 0.0) -> None:
+        node = self.nodes[node_id]
+        node.last_heartbeat = now
+        node.load = load
+        if node.state is NodeState.DOWN:
+            node.state = NodeState.UP   # node rejoined (elastic growth)
+
+    def check_heartbeats(self, now: float) -> List[int]:
+        """Mark nodes DOWN whose heartbeat lapsed; returns newly-down ids."""
+        newly_down = []
+        for node in self.nodes.values():
+            if (node.state is NodeState.UP
+                    and now - node.last_heartbeat > self.heartbeat_timeout):
+                node.state = NodeState.DOWN
+                newly_down.append(node.node_id)
+        for nid in newly_down:
+            for cb in self._down_callbacks:
+                cb(nid)
+        return newly_down
+
+    def on_node_down(self, callback) -> None:
+        self._down_callbacks.append(callback)
+
+    def mark_down(self, node_id: int) -> List[Tuple[int, int]]:
+        """Fail a node; returns the task keys that were running on it."""
+        node = self.nodes[node_id]
+        node.state = NodeState.DOWN
+        orphans = list(node.running)
+        node.running.clear()
+        node.free_slots = node.slots
+        node.free_mem = node.mem_mb
+        node.free_accel = node.accelerators
+        for cb in self._down_callbacks:
+            cb(node_id)
+        return orphans
+
+    def drain(self, node_id: int) -> None:
+        self.nodes[node_id].state = NodeState.DRAINED
+
+    # ------------------------------------------------------ allocation
+    def allocate(self, task: Task, node_id: int) -> None:
+        for lic in task.request.licenses:
+            assert self.licenses.get(lic, 0) > 0, lic
+            self.licenses[lic] -= 1
+        self.nodes[node_id].allocate(task)
+        task.node_id = node_id
+
+    def release(self, task: Task) -> None:
+        for lic in task.request.licenses:
+            self.licenses[lic] = self.licenses.get(lic, 0) + 1
+        if task.node_id is not None and task.node_id in self.nodes:
+            self.nodes[task.node_id].release(task)
+
+    # --------------------------------------------------------- queries
+    def up_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.state is NodeState.UP]
+
+    def free_slots(self) -> int:
+        return sum(n.free_slots for n in self.up_nodes())
+
+    def total_slots(self) -> int:
+        return sum(n.slots for n in self.up_nodes())
+
+    def candidates(self, req: ResourceRequest) -> List[Node]:
+        if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
+            return []
+        return [n for n in self.up_nodes() if n.fits(req)]

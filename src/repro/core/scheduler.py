@@ -1,0 +1,351 @@
+"""The scheduler engine: the paper's four functions wired together.
+
+  job lifecycle management  -> QueueManager (+ JobStats accounting)
+  resource management       -> ResourceManager (heartbeats, allocation)
+  scheduling                -> Policy (FIFO/backfill/binpack/locality, gang)
+  job execution             -> dispatch/startup/teardown with a serialized
+                               scheduler-time model (LatencyProfile)
+
+Latency model mechanics: the scheduler is a *serial server* — every dispatch
+consumes ``central_cost + queue_coeff * queue_depth`` seconds of scheduler
+time and every completion ``completion_cost``; a dispatched task additionally
+pays ``startup_cost`` node-locally before its payload runs. These mechanisms
+generate the paper's Delta-T = t_s * n^alpha_s behaviour (families.py holds
+per-family calibrations; benchmarks fit t_s and alpha_s from runs).
+
+The engine is used three ways:
+  * virtual-time simulation (paper benchmark, scale experiments);
+  * real-time with an Executor running Python/JAX payloads;
+  * embedded as the control plane of the serving engine (serving/engine.py).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.families import INPROC, LatencyProfile
+from repro.core.job import Job, JobState, JobStats, Task, TaskState
+from repro.core.policies import FIFOPolicy, Policy
+from repro.core.queues import QueueManager
+from repro.core.resources import ResourceManager
+from repro.core.simulator import EventLoop
+
+
+@dataclass
+class SchedulerConfig:
+    speculative: bool = False          # straggler mitigation (clone slow tasks)
+    speculative_factor: float = 2.0    # clone when runtime > factor * median
+    preemption: bool = False
+    heartbeat_interval: float = 0.0    # 0 = disabled (sim drives failures)
+    max_dispatch_per_cycle: int = 0    # 0 = unlimited
+
+
+class Scheduler:
+    def __init__(self, rm: ResourceManager, policy: Optional[Policy] = None,
+                 profile: LatencyProfile = INPROC,
+                 loop: Optional[EventLoop] = None,
+                 executor: Optional["Executor"] = None,
+                 config: Optional[SchedulerConfig] = None):
+        self.rm = rm
+        self.qm = QueueManager()
+        self.policy = policy or FIFOPolicy()
+        self.profile = profile
+        self.loop = loop or EventLoop()
+        self.executor = executor
+        self.config = config or SchedulerConfig()
+        self.stats: Dict[int, JobStats] = {}
+        self.sched_clock = 0.0           # serial scheduler busy-until
+        self.dispatched = 0
+        self.completed = 0
+        self._cursor: Dict[int, int] = {}          # job_id -> next task index
+        self._requeue: Deque[Task] = collections.deque()
+        self._free_stack: List[int] = []           # fast path: unit-slot nodes
+        self._fast = isinstance(self.policy, FIFOPolicy)
+        self._next_cycle: Optional[float] = None
+        self._active_jobs: Dict[int, Job] = {}
+        self._clones: Dict[Tuple[int, int], Task] = {}
+        self._durations: Deque[float] = collections.deque(maxlen=512)
+        self.rm.on_node_down(self._node_down)
+
+    # ----------------------------------------------------------- submit
+    def submit(self, job: Job) -> None:
+        now = self.loop.now
+        self.sched_clock = max(self.sched_clock, now) + self.profile.submit_cost
+        self.qm.submit(job, now)
+        self._active_jobs[job.job_id] = job
+        self._cursor[job.job_id] = 0
+        self.stats[job.job_id] = JobStats(
+            job_id=job.job_id, submit_time=now, n_tasks=job.n_tasks)
+        self._request_cycle()
+
+    # ----------------------------------------------------------- cycles
+    def _request_cycle(self) -> None:
+        t = max(self.loop.now, self.sched_clock) + self.profile.cycle_interval
+        if self._next_cycle is not None and self._next_cycle <= t:
+            return
+        self._next_cycle = t
+        self.loop.at(t, self._cycle)
+
+    def _cycle(self) -> None:
+        self._next_cycle = None
+        if self._fast and self._all_unit():
+            self._cycle_fast()
+        else:
+            self._cycle_policy()
+        if self.config.speculative:
+            self._speculate()
+            # periodic re-check while work is in flight (stragglers reveal
+            # themselves over time, not at completion events)
+            if self._active_jobs:
+                self.loop.after(max(self.profile.cycle_interval, 1.0),
+                                self._maybe_recheck)
+
+    def _maybe_recheck(self) -> None:
+        if self._active_jobs and self._next_cycle is None:
+            self._cycle()
+
+    def _all_unit(self) -> bool:
+        for job in self._active_jobs.values():
+            if job.parallel:
+                return False
+            for t in job.tasks[:1]:
+                r = t.request
+                if (r.slots != 1 or r.node_attrs or r.licenses
+                        or r.mem_mb or r.accelerators):
+                    return False
+        return True
+
+    def _rebuild_free_stack(self) -> None:
+        self._free_stack = []
+        for n in self.rm.up_nodes():
+            self._free_stack.extend([n.node_id] * n.free_slots)
+
+    def _next_waiting(self) -> Optional[Task]:
+        while self._requeue:
+            t = self._requeue.popleft()
+            if t.state in (TaskState.WAITING, TaskState.PREEMPTED):
+                return t
+        now = self.loop.now
+        for job in self.qm.queued_jobs(now):
+            cur = self._cursor.get(job.job_id, 0)
+            while cur < job.n_tasks:
+                t = job.tasks[cur]
+                cur += 1
+                if t.state is TaskState.WAITING:
+                    self._cursor[job.job_id] = cur
+                    return t
+            self._cursor[job.job_id] = cur
+        return None
+
+    def _queue_depth(self) -> int:
+        d = len(self._requeue)
+        for job in self._active_jobs.values():
+            if job.state in (JobState.QUEUED, JobState.RUNNING):
+                d += job.n_tasks - self._cursor.get(job.job_id, 0)
+        return d
+
+    def _cycle_fast(self) -> None:
+        if not self._free_stack:
+            self._rebuild_free_stack()
+        depth = self._queue_depth()
+        limit = self.config.max_dispatch_per_cycle or float("inf")
+        count = 0
+        while self._free_stack and count < limit:
+            task = self._next_waiting()
+            if task is None:
+                break
+            nid = self._free_stack.pop()
+            if self.rm.nodes[nid].free_slots <= 0:
+                continue
+            self._dispatch(task, nid, depth)
+            depth -= 1
+            count += 1
+
+    def _cycle_policy(self) -> None:
+        self._free_stack = []  # invalidated by generic allocation
+        jobs = [j for j in self.qm.queued_jobs(self.loop.now)
+                if j.state in (JobState.QUEUED, JobState.RUNNING)]
+        if not jobs:
+            return
+        depth = sum(len(j.pending_tasks()) for j in jobs)
+        assignments = self.policy.assign(jobs, self.rm, self.loop.now)
+        if self.config.preemption and not assignments and jobs:
+            assignments = self._try_preempt(jobs[0])
+        for task, nid in assignments:
+            self._dispatch(task, nid, depth)
+            depth -= 1
+
+    # --------------------------------------------------------- dispatch
+    def _dispatch(self, task: Task, node_id: int, queue_depth: int) -> None:
+        now = self.loop.now
+        c = self.profile.central_cost + self.profile.queue_coeff * queue_depth
+        self.sched_clock = max(self.sched_clock, now) + c
+        self.rm.allocate(task, node_id)
+        task.state = TaskState.DISPATCHED
+        task.dispatch_time = self.sched_clock
+        task.attempts += 1
+        self.dispatched += 1
+        job = self._active_jobs.get(task.job_id)
+        if job is not None and job.state is JobState.QUEUED:
+            job.state = JobState.RUNNING
+            st = self.stats[job.job_id]
+            if st.first_dispatch == 0.0:
+                st.first_dispatch = self.sched_clock
+        start = self.sched_clock + self.profile.startup_cost
+        task.start_time = start
+        task.state = TaskState.RUNNING
+        if self.executor is not None and task.payload is not None:
+            self.loop.at(start, self._run_payload, task)
+        else:
+            self.loop.at(start + task.duration, self._task_end, task, True)
+
+    def _run_payload(self, task: Task) -> None:
+        self.executor.run(task, lambda ok: self._task_end(task, ok))
+
+    # ------------------------------------------------------- completion
+    def _task_end(self, task: Task, ok: bool) -> None:
+        if task.state is not TaskState.RUNNING:
+            return  # cancelled / preempted / node already failed
+        now = self.loop.now
+        task.end_time = now
+        task.state = TaskState.COMPLETED if ok else TaskState.FAILED
+        self.rm.release(task)
+        if self._free_stack is not None and task.request.slots == 1 \
+                and task.node_id is not None:
+            self._free_stack.append(task.node_id)
+        self.sched_clock = max(self.sched_clock, now) + self.profile.completion_cost
+        self.completed += 1
+        self._durations.append(max(now - task.start_time, 1e-9))
+        job = self._active_jobs.get(task.job_id)
+        if job is None:
+            return
+        # speculative-clone resolution: first finisher wins
+        clone = self._clones.pop(task.key, None)
+        if clone is not None and clone is not task:
+            self._cancel(clone)
+        if task.speculative_of is not None:
+            orig = job.tasks[task.speculative_of]
+            self._clones.pop(orig.key, None)
+            if orig.state is TaskState.RUNNING:
+                self._cancel(orig)
+            task_for_stats = orig
+        else:
+            task_for_stats = task
+        if ok:
+            job.completed_tasks += 1
+            self.stats[job.job_id].task_seconds += task.duration
+        else:
+            if task.attempts <= job.max_restarts:
+                task.state = TaskState.WAITING
+                self._requeue.append(task)
+            else:
+                job.failed_tasks += 1
+        st = self.stats[job.job_id]
+        st.last_end = max(st.last_end, now)
+        if job.done:
+            state = JobState.COMPLETED if job.failed_tasks == 0 else JobState.FAILED
+            for q in self.qm.queues.values():
+                q.remove(job)
+            self.qm.job_finished(job, state, now)
+            del self._active_jobs[job.job_id]
+        self._request_cycle()
+
+    def _cancel(self, task: Task) -> None:
+        if task.state is TaskState.RUNNING:
+            self.rm.release(task)
+            if task.request.slots == 1 and task.node_id is not None:
+                self._free_stack.append(task.node_id)
+        task.state = TaskState.CANCELLED
+
+    # --------------------------------------------- fault tolerance paths
+    def _node_down(self, node_id: int) -> None:
+        """Requeue orphaned tasks of a failed node (job restarting §3.2.7)."""
+        self._free_stack = [n for n in self._free_stack if n != node_id]
+        for job in list(self._active_jobs.values()):
+            for t in job.tasks:
+                if t.node_id == node_id and t.state is TaskState.RUNNING:
+                    t.state = TaskState.WAITING
+                    t.node_id = None
+                    if t.attempts <= job.max_restarts:
+                        self._requeue.append(t)
+                    else:
+                        t.state = TaskState.FAILED
+                        job.failed_tasks += 1
+        self._request_cycle()
+
+    def fail_node(self, node_id: int) -> None:
+        self.rm.mark_down(node_id)
+
+    def _speculate(self) -> None:
+        """Straggler mitigation: clone tasks running far beyond the median."""
+        if len(self._durations) < 8 or not self._free_stack:
+            return
+        med = statistics.median(self._durations)
+        thresh = self.config.speculative_factor * med
+        now = self.loop.now
+        for job in self._active_jobs.values():
+            for t in job.tasks:
+                if (t.state is TaskState.RUNNING and t.speculative_of is None
+                        and t.key not in self._clones
+                        and now - t.start_time > thresh and self._free_stack):
+                    clone = Task(job_id=t.job_id, index=len(job.tasks),
+                                 duration=t.duration, payload=t.payload,
+                                 request=t.request, speculative_of=t.index)
+                    job.tasks.append(clone)
+                    job.n_clones += 1
+                    self._clones[t.key] = clone
+                    nid = self._free_stack.pop()
+                    if self.rm.nodes[nid].free_slots > 0:
+                        self._dispatch(clone, nid, self._queue_depth())
+
+    def _try_preempt(self, job: Job) -> List[Tuple[Task, int]]:
+        """Preempt lowest-priority running tasks to fit `job` (§3.2.7)."""
+        victims = sorted(
+            (j for j in self._active_jobs.values()
+             if j.state is JobState.RUNNING and j.priority < job.priority),
+            key=lambda j: j.priority)
+        freed = 0
+        need = sum(t.request.slots for t in job.pending_tasks())
+        for v in victims:
+            for t in v.tasks:
+                if t.state is TaskState.RUNNING:
+                    remaining = max(t.duration - (self.loop.now - t.start_time), 0.0)
+                    t.duration = remaining      # hibernate: resume remainder
+                    self.rm.release(t)
+                    t.state = TaskState.PREEMPTED
+                    t.node_id = None
+                    self._requeue.append(t)
+                    freed += t.request.slots
+                if freed >= need:
+                    break
+            if freed >= need:
+                break
+        if freed < need:
+            return []
+        return self.policy.assign([job], self.rm, self.loop.now)
+
+    # ------------------------------------------------------------- run
+    def run(self, until: float = float("inf")) -> None:
+        self.loop.run(until)
+
+    # ------------------------------------------------------------ stats
+    def utilization(self, job_ids: Optional[List[int]] = None) -> float:
+        """U = T_job / T_total over the given jobs (paper §4)."""
+        sts = [self.stats[j] for j in (job_ids or list(self.stats))]
+        if not sts:
+            return 0.0
+        slots = self.rm.total_slots() or 1
+        t0 = min(s.submit_time for s in sts)
+        t1 = max(s.last_end for s in sts)
+        span = max(t1 - t0, 1e-12)
+        busy = sum(s.task_seconds for s in sts)
+        return busy / (slots * span)
+
+
+class Executor:
+    """Real-execution backend interface (see core/executor.py)."""
+
+    def run(self, task: Task, done: Callable[[bool], None]) -> None:
+        raise NotImplementedError

@@ -1,0 +1,56 @@
+"""Discrete-event engine with a virtual clock.
+
+The paper's benchmark burns 93.7 processor-hours per task set on real sleep
+jobs; what it measures is pure control-plane latency. We run the same control
+plane (queues, policies, dispatch accounting) against a virtual clock so the
+full Table-9 grid executes in seconds at 1408+ slots, and scales to >=100k
+slots for the large-scale runnability experiments.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class EventLoop:
+    """Priority-queue event loop over virtual time."""
+
+    __slots__ = ("_heap", "_seq", "now", "_running")
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Callable, tuple]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self._running = False
+
+    def at(self, time: float, fn: Callable, *args) -> None:
+        if time < self.now:
+            time = self.now
+        heapq.heappush(self._heap, (time, next(self._seq), fn, args))
+
+    def after(self, delay: float, fn: Callable, *args) -> None:
+        self.at(self.now + delay, fn, *args)
+
+    def run(self, until: float = float("inf"), max_events: int = 0) -> int:
+        """Process events; returns number processed."""
+        n = 0
+        self._running = True
+        while self._heap and self._running:
+            time, _, fn, args = self._heap[0]
+            if time > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = time
+            fn(*args)
+            n += 1
+            if max_events and n >= max_events:
+                break
+        self._running = False
+        return n
+
+    def stop(self) -> None:
+        self._running = False
+
+    def empty(self) -> bool:
+        return not self._heap

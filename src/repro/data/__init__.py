@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, TokenPipeline
+
+__all__ = ["SyntheticTokens", "TokenPipeline"]

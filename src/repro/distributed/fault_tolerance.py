@@ -1,0 +1,158 @@
+"""Fault tolerance for 1000+ node training runs.
+
+Components:
+  * HeartbeatMonitor — per-slice liveness from the control plane's resource
+    manager (core.resources); lapsed slices are marked DOWN and the run
+    transitions to RECOVERING.
+  * ElasticPlan — given the surviving slice set, rebuild the mesh with a
+    shrunken data axis (model axis is never shrunk: TP shards are
+    load-bearing) and rescale per-device batch so the global batch is
+    preserved where divisible.
+  * TrainSupervisor — drives the train loop as a restartable state machine:
+    step -> (maybe) checkpoint -> on failure: restore newest committed
+    checkpoint, re-mesh, resume from the exact data position (the data
+    pipeline is counter-seeded, so restart is bit-exact at unchanged scale).
+
+Straggler mitigation at the step level (slow *host*, not failed) is the
+scheduler's speculative re-execution (core.scheduler); inside a step the
+SPMD collective implies gang semantics — the paper's gang scheduling is a
+*hard* requirement here, as recorded in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.resources import NodeState, ResourceManager
+
+
+@dataclass
+class SliceState:
+    slice_id: int
+    healthy: bool = True
+    last_heartbeat: float = 0.0
+
+
+class HeartbeatMonitor:
+    """Tracks pod-slice liveness (one 'node' per host/slice)."""
+
+    def __init__(self, n_slices: int, timeout: float = 30.0):
+        self.rm = ResourceManager(heartbeat_timeout=timeout)
+        self.rm.add_nodes(n_slices, slots=1)
+        self.timeout = timeout
+
+    def beat(self, slice_id: int, now: Optional[float] = None) -> None:
+        self.rm.heartbeat(slice_id, now if now is not None else time.time())
+
+    def check(self, now: Optional[float] = None) -> List[int]:
+        return self.rm.check_heartbeats(now if now is not None else time.time())
+
+    def healthy_slices(self) -> List[int]:
+        return [n.node_id for n in self.rm.up_nodes()]
+
+    def fail(self, slice_id: int) -> None:
+        self.rm.mark_down(slice_id)
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    """A re-mesh decision after slice loss/gain."""
+
+    data_parallel: int
+    model_parallel: int
+    global_batch: int
+    per_replica_batch: int
+
+    @classmethod
+    def plan(cls, healthy_slices: int, slices_per_data_shard: int,
+             model_parallel: int, global_batch: int) -> "ElasticPlan":
+        """Shrink the data axis to what the healthy slices support.
+
+        Keeps global batch by growing per-replica batch when divisible;
+        otherwise reduces global batch to the nearest multiple (recorded so
+        the optimizer LR can be rescaled by the caller).
+        """
+        dp = max(healthy_slices // slices_per_data_shard, 1)
+        if global_batch % dp == 0:
+            per = global_batch // dp
+            gb = global_batch
+        else:
+            per = max(global_batch // dp, 1)
+            gb = per * dp
+        return cls(data_parallel=dp, model_parallel=model_parallel,
+                   global_batch=gb, per_replica_batch=per)
+
+
+@dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    remeshes: List[Tuple[int, int]] = field(default_factory=list)  # (step, dp)
+    final_step: int = 0
+
+
+class TrainSupervisor:
+    """Restartable training state machine (failure injection friendly).
+
+    train_fn(state, step) -> state    — one (possibly jitted) train step
+    save/restore via CheckpointManager; on_failure rebuilds meshes via the
+    ElasticPlan and calls `remesh_fn(plan, state)` if provided.
+    """
+
+    def __init__(self, ckpt: CheckpointManager,
+                 monitor: HeartbeatMonitor,
+                 slices_per_data_shard: int = 1,
+                 model_parallel: int = 1,
+                 global_batch: int = 8,
+                 checkpoint_every: int = 50):
+        self.ckpt = ckpt
+        self.monitor = monitor
+        self.spd = slices_per_data_shard
+        self.mp = model_parallel
+        self.gb = global_batch
+        self.checkpoint_every = checkpoint_every
+        self.report = SupervisorReport()
+
+    def run(self, state: Any, train_fn: Callable[[Any, int], Any],
+            start_step: int, total_steps: int,
+            failure_injector: Optional[Callable[[int], Optional[int]]] = None,
+            remesh_fn: Optional[Callable] = None) -> Tuple[Any, SupervisorReport]:
+        step = start_step
+        while step < total_steps:
+            failed_slice = failure_injector(step) if failure_injector else None
+            if failed_slice is not None:
+                self.monitor.fail(failed_slice)
+            down = [n for n in self.monitor.rm.nodes.values()
+                    if n.state is not NodeState.UP]
+            if down:
+                # ---- recovery path: restore + elastic re-mesh
+                self.report.failures += 1
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    state, extra = self.ckpt.restore(state)
+                    step = int(extra.get("step", latest))
+                    self.report.restores += 1
+                plan = ElasticPlan.plan(
+                    len(self.monitor.healthy_slices()), self.spd, self.mp,
+                    self.gb)
+                self.report.remeshes.append((step, plan.data_parallel))
+                if remesh_fn is not None:
+                    state = remesh_fn(plan, state)
+                # simulate repair: nodes rejoin for subsequent steps
+                for n in down:
+                    self.monitor.rm.heartbeat(n.node_id, time.time())
+            state = train_fn(state, step)
+            step += 1
+            self.report.steps_run += 1
+            if step % self.checkpoint_every == 0:
+                self.ckpt.save(step, state, extra={"step": step})
+        self.ckpt.save(total_steps, state, extra={"step": total_steps})
+        self.ckpt.wait()
+        self.report.final_step = step
+        return state, self.report

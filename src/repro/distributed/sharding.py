@@ -1,0 +1,268 @@
+"""Logical-axis sharding: maps model-level axis names to mesh axes.
+
+Models annotate activations with ``constrain(x, "batch", "seq", "embed")`` and
+parameters carry logical-axis tuples derived from their pytree path. A
+``ShardingRules`` object (per arch × mesh) resolves logical names to physical
+mesh axes; outside of an active rules context every annotation is a no-op so
+the same model code runs unsharded on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Thread-local active context so constrain() works inside jit traces without
+# plumbing the mesh through every layer call.
+_ctx = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    rules: Dict[str, Any] = field(default_factory=dict)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             axis_sizes: Optional[Dict[str, int]] = None) -> P:
+        """Resolve logical axes; when `shape`/`axis_sizes` are given, mesh
+        axes that do not divide the dimension are dropped (replicated)."""
+        phys = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                phys.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            # a mesh axis may appear at most once in a PartitionSpec
+            axes = tuple(a for a in axes if a not in used)
+            if shape is not None and axis_sizes is not None and axes:
+                kept = []
+                rem = shape[i]
+                for a in axes:
+                    if rem % axis_sizes.get(a, 1) == 0:
+                        kept.append(a)
+                        rem //= axis_sizes[a]
+                axes = tuple(kept)
+            used.update(axes)
+            if not axes:
+                phys.append(None)
+            else:
+                phys.append(axes if len(axes) != 1 else axes[0])
+        # trim trailing Nones for tidier specs
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+
+def default_rules(mesh: Mesh, cfg=None) -> ShardingRules:
+    """Production rules for the (pod?, data, model) mesh.
+
+    batch  -> all data-parallel axes (pod, data)
+    model-parallel dims (heads, ffn, vocab) -> model
+    experts -> the data-parallel axes when divisible (expert parallelism),
+               so expert weights are *fully* sharded across the mesh.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    rules: Dict[str, Any] = {
+        "batch": dp_axes,
+        "seq": None,
+        "kv_seq": None,   # K/V sequence: stays replicated under seq-parallel
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,  # resolved below
+        "head_dim": None,
+        "ffn": "model",
+        "vocab": "model",
+        "expert_ffn": "model",
+        "experts": None,   # resolved below
+        "state": None,
+        "conv": None,
+        "ssm_inner": "model",
+        "frontend": None,
+        "seq_sp": None,    # sequence-parallel axis, enabled per-shape
+    }
+    if cfg is not None:
+        model_size = axis_sizes.get("model", 1)
+        if cfg.n_kv_heads % model_size == 0 and cfg.n_kv_heads >= model_size:
+            rules["kv_heads"] = "model"
+        if cfg.n_heads % model_size != 0:
+            # archs whose head count doesn't divide TP (gemma 8, arctic 56,
+            # phi4 24): shard the head_dim instead (contraction all-reduce)
+            rules["heads"] = None
+            rules["head_dim"] = "model"
+        if cfg.moe.enabled:
+            dp_total = int(np.prod([axis_sizes[a] for a in dp_axes])) if dp_axes else 1
+            if dp_axes and cfg.moe.n_experts % dp_total == 0:
+                rules["experts"] = dp_axes
+            elif "data" in axis_sizes and cfg.moe.n_experts % axis_sizes["data"] == 0:
+                rules["experts"] = ("data",)
+            elif cfg.moe.n_experts % model_size == 0:
+                rules["experts"] = "model"
+                rules["expert_ffn"] = None
+    return ShardingRules(rules)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def active() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_ctx, "state", None)
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply a sharding constraint if a rules context is active.
+
+    Axes that do not divide the corresponding dimension are dropped, so the
+    same model code works at any batch/seq size (e.g. batch=1 long-context).
+    """
+    state = active()
+    if state is None:
+        return x
+    mesh, rules = state
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = rules.spec(logical_axes, shape=x.shape, axis_sizes=axis_sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter logical axes by pytree path
+# ---------------------------------------------------------------------------
+
+# Ordered (regex on joined path, logical axes per dim — trailing dims matched
+# right-aligned; leading unmatched dims get None, e.g. the scan-group dim).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"tok_embed$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"frontend_proj$", ("frontend", "embed")),
+    (r"wq$", ("embed", "heads", "head_dim")),
+    (r"wk$", ("embed", "kv_heads", "head_dim")),
+    (r"wv$", ("embed", "kv_heads", "head_dim")),
+    (r"wo$", ("heads", "head_dim", "embed")),
+    (r"(w_gate|w_up)$", ("embed", "ffn")),
+    (r"w_down$", ("ffn", "embed")),
+    (r"router$", ("embed", "experts")),
+    (r"experts?/.*(w_gate|w_up)$", ("experts", "embed", "expert_ffn")),
+    (r"experts?/.*w_down$", ("experts", "expert_ffn", "embed")),
+    (r"(in_proj|in_proj_x|in_proj_z)$", ("embed", "ssm_inner")),
+    (r"conv_w$", ("conv", "ssm_inner")),
+    (r"(x_dt|x_b|x_c)$", ("ssm_inner", None)),
+    (r"dt_proj$", (None, "ssm_inner")),
+    (r"(a_log|ssm_d|dt_bias)$", ("ssm_inner", "state")),
+    (r"out_proj$", ("ssm_inner", "embed")),
+    # xlstm
+    (r"(up_proj|gate_proj)$", ("embed", "ssm_inner")),
+    (r"down_proj$", ("ssm_inner", "embed")),
+    (r"(wq_x|wk_x|wv_x|wi_x|wf_x|wo_x)$", ("ssm_inner", None)),
+    (r"(rq|rk|rv|ri|rf|ro|rz)$", (None, None)),
+    (r"(wi|wf|wz|wo_g)$", ("embed", None)),
+)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter at `path` with `ndim` dims."""
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            axes = tuple(axes)
+            if len(axes) > ndim:
+                axes = axes[len(axes) - ndim:]
+            return (None,) * (ndim - len(axes)) + axes
+    return (None,) * ndim
+
+
+def tree_paths(tree) -> Any:
+    """Pytree of '/'-joined key paths, same structure as `tree`."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def keystr(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_unflatten(treedef, [keystr(kp) for kp, _ in paths])
+
+
+def param_specs(params, rules: ShardingRules, mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree for a parameter pytree (divisibility-guarded
+    against `mesh` when given)."""
+    paths = tree_paths(params)
+    axis_sizes = (
+        dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    )
+    return jax.tree_util.tree_map(
+        lambda p, x: rules.spec(
+            logical_axes_for(p, np.ndim(x)),
+            shape=np.shape(x) if axis_sizes is not None else None,
+            axis_sizes=axis_sizes,
+        ),
+        paths, params,
+    )
+
+
+def param_shardings(params, mesh: Mesh, rules: ShardingRules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, rules, mesh)
+    )
+
+
+def zero1_specs(params, rules: ShardingRules, mesh: Mesh):
+    """Optimizer-state specs: params' specs with data-parallel axes added to
+    the largest still-unsharded, divisible dimension (ZeRO-1)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    dp_total = int(np.prod([axis_sizes[a] for a in dp_axes])) if dp_axes else 1
+    base = param_specs(params, rules, mesh)
+
+    def add_dp(spec: P, x) -> P:
+        if dp_total == 1 or np.ndim(x) == 0:
+            return spec
+        entries = list(spec) + [None] * (np.ndim(x) - len(spec))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,) if e else ()):
+                used.add(a)
+        if any(a in used for a in dp_axes):
+            return spec  # already data-sharded (e.g. experts)
+        # shard sizes after existing partitioning
+        def shard_size(dim, e):
+            den = 1
+            for a in (e if isinstance(e, tuple) else (e,) if e else ()):
+                den *= axis_sizes[a]
+            return x.shape[dim] // den
+        cands = [
+            (shard_size(d, e), d)
+            for d, e in enumerate(entries)
+            if e is None and shard_size(d, None) % dp_total == 0 and x.shape[d] >= dp_total
+        ]
+        if not cands:
+            return spec
+        _, dim = max(cands)
+        entries[dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map(add_dp, base, params)

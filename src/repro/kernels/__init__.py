@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot-spots under the scheduler:
+flash attention (32k prefill), Mamba selective scan (jamba/long-context),
+grouped expert GEMM (MoE). Each has a pure-jnp oracle in ref.py; ops.py is
+the dispatching jit wrapper (interpret=True off-TPU)."""

@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (forward): blockwise online softmax in VMEM.
+
+TPU adaptation of the CUDA flash algorithm (DESIGN.md §2): instead of
+SM-level shared-memory tiles, BlockSpecs tile q/k/v into VMEM; the grid is
+(batch*q_heads, q_blocks, k_blocks) with the k dimension innermost so the
+fp32 (m, l, acc) scratch carries across k-steps. Causal skipping via
+pl.when on whole blocks (the triangular grid saves ~2x over the jnp chunked
+path, which must compute every block pair). GQA is handled by integer
+division in the k/v index_map (no KV duplication in VMEM or HBM).
+
+MXU alignment: block_q/block_k default 512/512, head_dim padded by caller to
+a multiple of 128 when needed (all assigned archs have hd in {64,128,256}).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.3819763e38
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # whole-block causal skip: block is live iff k_start <= q_end
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window > 0:
+        live = jnp.logical_and(
+            live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False):
+    """q: [B,S,Hq,hd]; k,v: [B,T,Hkv,hd] -> [B,S,Hq,hd]."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+    # layout: fold heads into the leading grid dim: [B*Hq, S, hd]
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, hd)
+
+    kernel = functools.partial(
+        _kernel, scale=hd ** -0.5, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, qi, ki: (h // G, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, qi, ki: (h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),       # running max m
+            _vmem((block_q,), jnp.float32),       # running denom l
+            _vmem((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,73 @@
+"""Pallas TPU grouped expert GEMM: x [E,M,K] @ w [E,K,N] -> [E,M,N].
+
+The MoE hot loop after dispatch. Each expert's GEMM is tiled for the MXU
+(128-multiple blocks) with an fp32 VMEM accumulator carried across the
+k-grid dimension; the expert index is the outermost grid dim so expert
+weight tiles stream through VMEM one expert at a time (weight-stationary
+within an expert).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def expert_gemm(x, w, *, block_m: int = DEFAULT_BLOCK_M,
+                block_n: int = DEFAULT_BLOCK_N,
+                block_k: int = DEFAULT_BLOCK_K,
+                interpret: bool = False):
+    E, M, K = x.shape
+    _, _, N = w.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, \
+        (M, N, K, block_m, block_n, block_k)
+    nm, nn, nk = M // block_m, N // block_n, K // block_k
+
+    kernel = functools.partial(_kernel, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda e, mi, ni, ki: (e, mi, ki)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda e, mi, ni, ki: (e, ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, mi, ni, ki: (e, mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[_vmem((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately naive: full materialization, fp32 math — tests sweep shapes and
+dtypes asserting allclose(kernel, ref).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: [B,S,Hq,hd]; k,v: [B,T,Hkv,hd] -> [B,S,Hq,hd] (GQA grouped)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, kf) * hd ** -0.5
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, vf)
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def ssm_scan_ref(u, dt, A, B, C, D, h0=None):
+    """Sequential Mamba-1 selective scan, fp32.
+
+    u, dt: [Bb,S,d]; A: [d,N]; B,C: [Bb,S,N]; D: [d].
+    Returns (y [Bb,S,d], h_last [Bb,d,N]).
+    """
+    Bb, S, d = u.shape
+    N = A.shape[1]
+    u32 = u.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    B32 = B.astype(jnp.float32)
+    C32 = C.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    h = jnp.zeros((Bb, d, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        ut, dtt, Bt, Ct = xs
+        dA = jnp.exp(dtt[..., None] * A32)          # [Bb,d,N]
+        dBx = (dtt * ut)[..., None] * Bt[:, None, :]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h, (u32.swapaxes(0, 1), dt32.swapaxes(0, 1),
+                  B32.swapaxes(0, 1), C32.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + u32 * D.astype(jnp.float32)
+    return y.astype(u.dtype), h
+
+
+def expert_gemm_ref(x, w):
+    """Grouped expert matmul: x [E,M,K] @ w [E,K,N] -> [E,M,N] (fp32 accum)."""
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

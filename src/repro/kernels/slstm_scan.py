@@ -1,0 +1,120 @@
+"""Pallas TPU fused sLSTM scan (forward).
+
+The roofline analysis (EXPERIMENTS.md §Perf #1) showed the XLA sLSTM path is
+catastrophically memory-bound: every timestep round-trips the recurrent
+weights R (16 MB) and ~a dozen [B, d] gate buffers through HBM —
+~50 MB/step -> petabytes per train step at 4096 steps x 24 layers.
+
+This kernel is the TPU-native fix: R, the (c, n, m, h) state and all gate
+temporaries live in VMEM for the whole sequence; HBM traffic collapses to
+the streamed preactivations (read once) and the h outputs (written once) —
+the same SRAM-residency idea as the xLSTM paper's fused CUDA kernel, mapped
+to the TPU memory hierarchy.
+
+Grid: (heads, time-chunks), time innermost so VMEM scratch carries the state
+across chunks; per-head R blocks are grid-invariant along t (Mosaic skips
+the re-fetch). Within a chunk, a fori_loop steps the recurrence with one
+stacked [B,dh] x [4*dh? no: g,dh,dh] matvec batch per step on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK_T = 256
+
+
+def _kernel(pre_ref, r_ref, c0_ref, n0_ref, m0_ref, h0_ref,
+            hs_ref, cT_ref, nT_ref, mT_ref, hT_ref,
+            c_s, n_s, m_s, h_s, *, chunk: int, nt: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _load():
+        c_s[...] = c0_ref[:, 0].astype(jnp.float32)
+        n_s[...] = n0_ref[:, 0].astype(jnp.float32)
+        m_s[...] = m0_ref[:, 0].astype(jnp.float32)
+        h_s[...] = h0_ref[:, 0].astype(jnp.float32)
+
+    r = r_ref[:, 0].astype(jnp.float32)      # [4, dh, dh]
+
+    def step(t, _):
+        pre_t = pre_ref[:, t, :, 0].astype(jnp.float32)  # [B, 4, dh]
+        h = h_s[...]                                     # [B, dh]
+        rec = jnp.einsum("bk,gkl->gbl", h, r)            # [4, B, dh]
+        i_t = pre_t[:, 0] + rec[0]
+        f_t = pre_t[:, 1] + rec[1]
+        z_t = jnp.tanh(pre_t[:, 2] + rec[2])
+        o_t = jax.nn.sigmoid(pre_t[:, 3] + rec[3])
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m_s[...], i_t)
+        scale = jnp.exp(logf + m_s[...] - m_new)
+        inp = jnp.exp(i_t - m_new)
+        c = c_s[...] * scale + inp * z_t
+        n = n_s[...] * scale + inp
+        h_new = o_t * c / jnp.maximum(n, 1e-6)
+        c_s[...] = c
+        n_s[...] = n
+        m_s[...] = m_new
+        h_s[...] = h_new
+        hs_ref[:, t, 0] = h_new.astype(hs_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == nt - 1)
+    def _store():
+        cT_ref[:, 0] = c_s[...]
+        nT_ref[:, 0] = n_s[...]
+        mT_ref[:, 0] = m_s[...]
+        hT_ref[:, 0] = h_s[...]
+
+
+def slstm_scan_fwd(pre, r_all, c0, n0, m0, h0, *,
+                   chunk_t: int = DEFAULT_CHUNK_T, interpret: bool = False):
+    """pre: [B,S,4,d] preactivations; r_all: [4,H,dh,dh];
+    c0/n0/m0/h0: [B,H,dh]. Returns (hs [B,S,d], (cT,nT,mT,hT) [B,H,dh]).
+    """
+    B, S, four, d = pre.shape
+    _, H, dh, _ = r_all.shape
+    assert four == 4 and H * dh == d, (pre.shape, r_all.shape)
+    chunk_t = min(chunk_t, S)
+    assert S % chunk_t == 0
+    nt = S // chunk_t
+    # head-major layout for per-head blocks: pre -> [B,S,4,H,dh]
+    pre_h = pre.reshape(B, S, 4, H, dh)
+
+    kernel = functools.partial(_kernel, chunk=chunk_t, nt=nt)
+    state_spec = pl.BlockSpec((B, 1, dh), lambda h, t: (0, h, 0))
+    hs, cT, nT, mT, hT = pl.pallas_call(
+        kernel,
+        grid=(H, nt),
+        in_specs=[
+            pl.BlockSpec((B, chunk_t, 4, 1, dh), lambda h, t: (0, t, 0, h, 0)),
+            pl.BlockSpec((4, 1, dh, dh), lambda h, t: (0, h, 0, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((B, chunk_t, 1, dh), lambda h, t: (0, t, h, 0)),
+            state_spec, state_spec, state_spec, state_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, dh), pre.dtype),
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((B, dh), jnp.float32) for _ in range(4)],
+        interpret=interpret,
+    )(pre_h, r_all, c0, n0, m0, h0)
+    return hs.reshape(B, S, d), (cT, nT, mT, hT)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,83 @@
+"""Pallas TPU selective-scan kernel (Mamba-1 forward).
+
+TPU adaptation of the CUDA selective-scan (DESIGN.md §2): the CUDA kernel
+keeps h in registers/SRAM and walks time sequentially per thread block; here
+each grid cell owns a (batch, d_inner-block) tile, keeps the [bd, N] state in
+VMEM scratch, and walks time with fori_loop — every step is a [bd, N]
+VPU-wide elementwise update plus a small contraction with C_t. HBM traffic
+is exactly u/dt/B/C read once and y written once (the jnp fallback spills
+chunk states to HBM).
+
+Grid: (B, d_inner/block_d). Time stays inside the kernel so the state never
+leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+            y_ref, h_out_ref, *, seq_len: int):
+    A = A_ref[...].astype(jnp.float32)              # [bd, N]
+    D = D_ref[...].astype(jnp.float32)              # [bd]
+    h_init = h0_ref[0].astype(jnp.float32)          # [bd, N]
+
+    def step(t, h):
+        u_t = u_ref[0, t, :].astype(jnp.float32)    # [bd]
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # [bd]
+        B_t = B_ref[0, t, :].astype(jnp.float32)    # [N]
+        C_t = C_ref[0, t, :].astype(jnp.float32)    # [N]
+        dA = jnp.exp(dt_t[:, None] * A)             # [bd, N]
+        h = h * dA + (dt_t * u_t)[:, None] * B_t[None, :]
+        y = jnp.sum(h * C_t[None, :], axis=1) + u_t * D
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, step, h_init)
+    h_out_ref[0] = h.astype(h_out_ref.dtype)
+
+
+def ssm_scan_fwd(u, dt, A, B, C, D, h0=None, *,
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = False):
+    """u, dt: [Bb,S,d]; A: [d,N]; B,C: [Bb,S,N]; D: [d]; h0: [Bb,d,N] or None.
+
+    Returns (y [Bb,S,d], h_last [Bb,d,N] fp32).
+    """
+    Bb, S, d = u.shape
+    N = A.shape[1]
+    block_d = min(block_d, d)
+    assert d % block_d == 0, (d, block_d)
+    nd = d // block_d
+    if h0 is None:
+        h0 = jnp.zeros((Bb, d, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, seq_len=S)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(Bb, nd),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, di: (b, 0, di)),   # u
+            pl.BlockSpec((1, S, block_d), lambda b, di: (b, 0, di)),   # dt
+            pl.BlockSpec((block_d, N), lambda b, di: (di, 0)),         # A
+            pl.BlockSpec((1, S, N), lambda b, di: (b, 0, 0)),          # B
+            pl.BlockSpec((1, S, N), lambda b, di: (b, 0, 0)),          # C
+            pl.BlockSpec((block_d,), lambda b, di: (di,)),             # D
+            pl.BlockSpec((1, block_d, N), lambda b, di: (b, di, 0)),   # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, di: (b, 0, di)),   # y
+            pl.BlockSpec((1, block_d, N), lambda b, di: (b, di, 0)),   # h_out
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, d), u.dtype),
+            jax.ShapeDtypeStruct((Bb, d, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, dt, A, B, C, D, h0)
+    return y, h_last

@@ -1,0 +1,318 @@
+"""Optimized-HLO analyzer: loop-aware FLOP / traffic / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — `while`
+loop bodies (scan-over-layers, chunked attention, SSM chunk scans) are not
+scaled by trip count, so its numbers undercount real work by large factors
+(verified: gemma train_4k reports ~4x fewer FLOPs than 6ND). This module
+re-derives the roofline inputs from the optimized HLO text:
+
+  * splits the module into computations, builds symbol tables (op name ->
+    result type, including parameters) and the call graph (`while`
+    body/condition, `fusion` calls, `call`, `conditional`, `to_apply`);
+  * extracts `while` trip counts from the integer constant feeding the loop
+    condition's comparison;
+  * multiplies per-op costs by the product of enclosing trip counts;
+  * counts dot FLOPs exactly: 2 * numel(result) * prod(lhs contracting dims);
+  * counts collective bytes as max(operand, result) bytes per op — a wire
+    proxy documented in EXPERIMENTS.md;
+  * approximates HBM traffic as operand+result bytes of top-level (non-fused)
+    fusion/dot/copy/collective/scatter/gather/DUS ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\(.*?\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[^\]]*\]))")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_EW_FLOP_KINDS = {
+    "add", "multiply", "subtract", "divide", "exponential", "tanh", "rsqrt",
+    "sqrt", "power", "log", "maximum", "minimum", "negate", "abs",
+    "exponential-minus-one", "logistic", "cosine", "sine",
+}
+
+_TRAFFIC_KINDS = {"fusion", "dot", "copy", "scatter", "gather",
+                  "dynamic-update-slice", "dynamic-slice", "convolution",
+                  "concatenate", "pad", "reduce", "select-and-scatter",
+                  "sort"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _operand_segment(line: str, kind: str) -> str:
+    """The text between the instruction's '(' and its matching ')'."""
+    i = line.find(kind + "(")
+    if i < 0:
+        return ""
+    i += len(kind)
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[i + 1:j]
+    return line[i + 1:]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            cur = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            for pname, ptype in _PARAM_RE.findall(hdr.group(3)):
+                cur.symbols[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        seg = _operand_segment(line, m.group(3))
+        operands = [o.strip().lstrip("%") for o in _split_top(seg)]
+        op = Op(name=m.group(1), kind=m.group(3), result_type=m.group(2),
+                line=line, operands=operands)
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.result_type
+    return comps
+
+
+def _split_top(s: str) -> List[str]:
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    if s[start:].strip():
+        out.append(s[start:])
+    return out
+
+
+_INT_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition computation — scan
+    lowers to `compare(i, constant(T))` (the constant may sit in the cond
+    region that calls a wrapped compare fusion)."""
+    consts = []
+    for op in cond.ops:
+        consts += [int(x) for x in _INT_CONST_RE.findall(op.line)]
+    return max(consts) if consts else 1
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    dots: Dict[str, Dict] = field(default_factory=dict)
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+    unknown_trips: int = 0
+
+    def as_dict(self) -> Dict:
+        top = sorted(self.dots.values(), key=lambda d: -d["flops"])[:12]
+        return {
+            "dot_flops": self.dot_flops,
+            "elementwise_flops": self.elementwise_flops,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "top_dots": top,
+            "trip_counts": self.trip_counts,
+            "unknown_trips": self.unknown_trips,
+        }
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def analyze(hlo: str, known_trips: Optional[Dict[str, int]] = None) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    cost = HloCost()
+    stack: List[Tuple[str, float, bool]] = [(entry.name, 1.0, False)]
+    seen = set()
+    while stack:
+        cname, mult, fused = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        key = (cname, round(mult, 6), fused)
+        if key in seen:
+            continue
+        seen.add(key)
+        for op in comp.ops:
+            _account(op, comp, mult, fused, cost)
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                if known_trips and op.name in known_trips:
+                    trip = known_trips[op.name]
+                elif cond and cond in comps:
+                    trip = _trip_count(comps[cond])
+                    if trip == 1:
+                        cost.unknown_trips += 1
+                else:
+                    trip = 1
+                    cost.unknown_trips += 1
+                cost.trip_counts[op.name] = trip
+                if body:
+                    stack.append((body, mult * trip, fused))
+                if cond:
+                    stack.append((cond, mult * (trip + 1), fused))
+            else:
+                for m in re.finditer(
+                        r"(?:calls|to_apply|true_computation|false_computation)"
+                        r"=%?([\w.\-]+)", op.line):
+                    stack.append((m.group(1), mult,
+                                  fused or op.kind == "fusion"))
+                bm = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+                if bm:
+                    for callee in bm.group(1).replace("%", "").split(","):
+                        stack.append((callee.strip(), mult, fused))
+    return cost
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    total = 0
+    for name in op.operands:
+        t = comp.symbols.get(name)
+        if t:
+            total += _type_bytes(t)
+    return total
+
+
+def _account(op: Op, comp: Computation, mult: float, fused: bool,
+             cost: HloCost) -> None:
+    if op.kind == "dot":
+        k = 1
+        mcon = _CONTRACT_RE.search(op.line)
+        lhs_t = comp.symbols.get(op.operands[0]) if op.operands else None
+        if mcon and lhs_t:
+            dims_list = _shape_dims(lhs_t)
+            if dims_list:
+                lhs_dims = dims_list[0][1]
+                for ci in mcon.group(1).split(","):
+                    if ci != "" and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+        flops = 2.0 * _numel(op.result_type) * k * mult
+        cost.dot_flops += flops
+        cost.dots[f"{comp.name}/{op.name}"] = {
+            "flops": flops, "k": k, "mult": mult,
+            "out": op.result_type.split("{")[0]}
+    elif op.kind in _EW_FLOP_KINDS:
+        cost.elementwise_flops += mult * _numel(op.result_type)
+    base = op.kind.replace("-start", "")
+    if base in COLLECTIVES and not op.kind.endswith("-done"):
+        b = max(_operand_bytes(op, comp), _type_bytes(op.result_type)) * mult
+        d = cost.collectives.setdefault(base, {"count": 0, "bytes": 0.0})
+        d["count"] += mult
+        d["bytes"] += b
+        cost.collective_bytes += b
+    if not fused and (op.kind in _TRAFFIC_KINDS or base in COLLECTIVES):
+        cost.traffic_bytes += mult * _op_traffic(op, comp)
+
+
+def _op_traffic(op: Op, comp: Computation) -> float:
+    """HBM bytes for one op execution.
+
+    dynamic-update-slice (bare or as a fusion root) is aliased in place by
+    XLA: traffic is read-update + write-slice, NOT the whole buffer — without
+    this the per-step KV-cache/scan-output updates dominate every loop's
+    traffic by orders of magnitude (meter bug found during the xlstm
+    hillclimb, EXPERIMENTS.md §Perf).
+    Similarly dynamic-slice reads only the slice it produces.
+    """
+    operand_b = _operand_bytes(op, comp)
+    result_b = _type_bytes(op.result_type)
+    is_dus = ("dynamic-update-slice" in op.kind
+              or (op.kind == "fusion" and "dynamic-update-slice" in op.name))
+    if is_dus:
+        per_operand = [
+            _type_bytes(comp.symbols.get(n, "")) for n in op.operands]
+        biggest = max(per_operand, default=0)
+        return 2.0 * max(operand_b - biggest, 0)
+    is_ds = ("dynamic-slice" in op.kind
+             or (op.kind == "fusion" and "update" not in op.name
+                 and ("dynamic_slice" in op.name or "dynamic-slice" in op.name)))
+    if is_ds:
+        return 2.0 * result_b
+    return operand_b + result_b

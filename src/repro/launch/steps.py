@@ -1,0 +1,283 @@
+"""Step builders: jit-able train/prefill/decode steps with full shardings.
+
+Builds, for an (arch config × shape × mesh), the step function plus
+in/out shardings — consumed by the dry-run, the real trainer, and the
+serving engine.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.models.model import Model
+from repro.optim import AdamW, cosine_schedule
+
+# ---------------------------------------------------------------------------
+# Cache logical axes (path + ndim based)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES = (
+    # attention KV cache [groups, B, L, kv_heads, head_dim]
+    (r"/(k|v)$", 5, (None, "batch", "seq_kv", "kv_heads", "head_dim")),
+    # mamba conv state [groups, B, K-1, din] / h [groups, B, din, N]
+    (r"/conv$", 4, (None, "batch", None, "ssm_inner")),
+    (r"/h$", 4, (None, "batch", "ssm_inner", None)),
+    # mLSTM: C [g,B,H,dh,dh], n [g,B,H,dh], m [g,B,H]
+    (r"/C$", 5, (None, "batch", "heads", None, None)),
+    (r"/n$", 4, (None, "batch", "heads", None)),
+    (r"/m$", 3, (None, "batch", "heads")),
+    # sLSTM: c/n/m/h [g, B, d]
+    (r"/(c|n|m|h)$", 3, (None, "batch", None)),
+)
+
+
+def cache_logical_axes(path: str, ndim: int):
+    for pat, nd, axes in _CACHE_RULES:
+        if nd == ndim and re.search(pat, path):
+            return axes
+    return (None,) * ndim
+
+
+def cache_specs(caches, rules: shd.ShardingRules, mesh: Mesh):
+    paths = shd.tree_paths(caches)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map(
+        lambda p, x: rules.spec(cache_logical_axes(p, np.ndim(x)),
+                                shape=np.shape(x), axis_sizes=axis_sizes),
+        paths, caches)
+
+
+# ---------------------------------------------------------------------------
+# Rules per shape
+# ---------------------------------------------------------------------------
+
+def rules_for(mesh: Mesh, cfg: ModelConfig, shape: Optional[ShapeConfig] = None,
+              overrides: Optional[Dict[str, Any]] = None) -> shd.ShardingRules:
+    rules = dict(shd.default_rules(mesh, cfg).rules)
+    axis_names = set(mesh.axis_names)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if shape is not None and shape.kind == "decode":
+        if shape.global_batch == 1:
+            # long-context single-stream decode: shard the KV sequence over
+            # every axis (flash-decode); batch axes are useless at B=1.
+            rules["seq_kv"] = tuple(a for a in ("pod", "data", "model")
+                                    if a in axis_names)
+        else:
+            rules["seq_kv"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return shd.ShardingRules(rules)
+
+
+def batch_specs(specs, mesh: Mesh, rules: shd.ShardingRules):
+    """Shardings for a train/prefill batch dict: dim0 = batch, dim1 = seq
+    for the [B, S] token/label/mask arrays (seq shards under SP rules)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(x):
+        if np.ndim(x) == 2:
+            names = ("batch", "seq")
+        else:
+            names = ("batch",) + (None,) * (np.ndim(x) - 1)
+        return rules.spec(names, shape=np.shape(x), axis_sizes=axis_sizes)
+
+    return jax.tree_util.tree_map(spec, specs)
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BuiltStep:
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    input_specs: Any           # ShapeDtypeStructs matching fn's args
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.input_specs)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     run: Optional[RunConfig] = None,
+                     rules: Optional[shd.ShardingRules] = None,
+                     use_pallas: bool = False) -> BuiltStep:
+    run = run or RunConfig(model=cfg)
+    model = build_model(cfg)
+    opt = AdamW(learning_rate=cosine_schedule(
+        run.learning_rate, run.warmup_steps, run.total_steps),
+        weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+    rules = rules or rules_for(mesh, cfg, shape)
+
+    def train_step(state, batch):
+        with shd.use_rules(mesh, rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(state["params"], batch,
+                                          use_pallas=use_pallas)
+            params, opt_state, om = opt.update(grads, state["opt"],
+                                               state["params"])
+            metrics = dict(metrics, loss=loss, **om)
+        return {"params": params, "opt": opt_state}, metrics
+
+    pspecs = model.param_specs()
+    ospecs = jax.eval_shape(opt.init, pspecs)
+    param_sh = shd.param_specs(pspecs, rules, mesh)
+    from repro.optim.adamw import OptState
+    opt_sharding = OptState(
+        step=P(),
+        m=shd.zero1_specs(ospecs.m, rules, mesh),
+        v=shd.zero1_specs(ospecs.v, rules, mesh))
+    bspecs = model.input_specs(shape)
+    batch_sh = batch_specs(bspecs, mesh, rules)
+    state_sh = {"params": param_sh, "opt": opt_sharding}
+    in_sh = _named(mesh, (state_sh, batch_sh))
+    out_sh = (_named(mesh, state_sh),
+              jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()),
+                                     {"ce": 0, "aux": 0, "loss": 0,
+                                      "grad_norm": 0, "lr": 0}))
+    state_specs = {"params": pspecs, "opt": ospecs}
+    return BuiltStep(train_step, in_sh, out_sh, (state_specs, bspecs),
+                     donate_argnums=(0,))
+
+
+def pad_heads_for_tp(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    """Megatron-style query-head padding to the TP multiple for inference.
+
+    Archs whose head count doesn't divide TP=16 (phi4: 24, arctic: 56,
+    gemma: 8) otherwise fall back to head_dim sharding, which makes the
+    attention-logits contraction partial -> an fp32 logits all-reduce per
+    (q,k) block (measured 6.7 TB/device on phi4 prefill_32k; the
+    sequence-parallel alternative was REFUTED — scan over a sharded q-chunk
+    axis replicates compute; see EXPERIMENTS.md §Perf #2). Padded q heads
+    carry zero output projections, so logits are bit-identical; at
+    deployment the checkpoint loader pads weights the same way. Inference
+    paths only (training would leak gradient into the padding).
+    """
+    import dataclasses
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.n_heads % model_size == 0:
+        return cfg
+    padded = -(-cfg.n_heads // model_size) * model_size
+    # GQA grouping requires kv | heads
+    while padded % cfg.n_kv_heads != 0:
+        padded += model_size
+    return dataclasses.replace(cfg, n_heads=padded,
+                               head_dim=cfg.resolved_head_dim)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                       rules: Optional[shd.ShardingRules] = None,
+                       use_pallas: bool = False,
+                       pad_heads: bool = True) -> BuiltStep:
+    if pad_heads:
+        cfg = pad_heads_for_tp(cfg, mesh)
+    model = build_model(cfg)
+    rules = rules or rules_for(mesh, cfg, shape)
+
+    def prefill_step(params, batch):
+        with shd.use_rules(mesh, rules):
+            logits, caches = model.prefill(
+                params, batch["tokens"], batch.get("frontend_embeds"),
+                use_pallas=use_pallas)
+        return logits, caches
+
+    pspecs = model.param_specs()
+    param_sh = shd.param_specs(pspecs, rules, mesh)
+    bspecs = model.input_specs(shape)
+    batch_sh = batch_specs(bspecs, mesh, rules)
+    cache_shape = jax.eval_shape(
+        lambda p, b: prefill_step(p, b)[1], pspecs, bspecs)
+    cache_sh = cache_specs(cache_shape, rules, mesh)
+    logits_sh = rules.spec(("batch", "vocab"))
+    in_sh = _named(mesh, (param_sh, batch_sh))
+    out_sh = _named(mesh, (logits_sh, cache_sh))
+    return BuiltStep(prefill_step, in_sh, out_sh, (pspecs, bspecs))
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      rules: Optional[shd.ShardingRules] = None,
+                      pad_heads: bool = True,
+                      steps_per_dispatch: int = 1) -> BuiltStep:
+    """steps_per_dispatch > 1 runs k greedy decode steps inside ONE jitted
+    dispatch (lax.scan, token fed back) — the paper's multilevel scheduling
+    applied at the step level: the per-dispatch scheduler latency t_s is
+    amortized over k tokens (EXPERIMENTS.md §Perf #3)."""
+    if pad_heads:
+        cfg = pad_heads_for_tp(cfg, mesh)
+    model = build_model(cfg)
+    rules = rules or rules_for(mesh, cfg, shape)
+
+    if steps_per_dispatch <= 1:
+        def serve_step(params, token, caches, cache_index):
+            with shd.use_rules(mesh, rules):
+                logits, new_caches = model.decode_step(
+                    params, token, caches, cache_index)
+            return logits, new_caches
+    else:
+        from repro.models.layers import dtype_of
+
+        def serve_step(params, token, caches, cache_index):
+            with shd.use_rules(mesh, rules):
+                logits0 = jnp.zeros((token.shape[0], cfg.padded_vocab),
+                                    dtype_of(cfg))
+
+                def body(carry, _):
+                    tok, caches, idx, _ = carry
+                    logits, caches = model.decode_step(params, tok, caches, idx)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                    return (nxt, caches, idx + 1, logits), None
+
+                (_, new_caches, _, logits), _ = jax.lax.scan(
+                    body, (token, caches, cache_index, logits0), None,
+                    length=steps_per_dispatch)
+            return logits, new_caches
+
+    pspecs = model.param_specs()
+    param_sh = shd.param_specs(pspecs, rules, mesh)
+    ispecs = model.input_specs(shape)
+    cache_sh = cache_specs(ispecs["caches"], rules, mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tok_sh = rules.spec(("batch", None), shape=(shape.global_batch, 1),
+                        axis_sizes=axis_sizes)
+    logits_sh = rules.spec(("batch", "vocab"),
+                           shape=(shape.global_batch, cfg.padded_vocab),
+                           axis_sizes=axis_sizes)
+    in_sh = _named(mesh, (param_sh, tok_sh, cache_sh, P()))
+    out_sh = _named(mesh, (logits_sh, cache_sh))
+    return BuiltStep(serve_step, in_sh, out_sh,
+                     (pspecs, ispecs["token"], ispecs["caches"],
+                      ispecs["cache_index"]),
+                     donate_argnums=(2,))
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+               **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, mesh, shape, **kw)
+    raise ValueError(shape.kind)

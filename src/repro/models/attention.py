@@ -1,0 +1,227 @@
+"""GQA/MQA/MHA attention with KV cache, causal/sliding-window masking.
+
+Prefill/train uses the fused jnp path by default (XLA attention) or the
+Pallas flash kernel when cfg-enabled; decode does a single-query attention
+against a static-size cache (flash-decode style sharded softmax is expressed
+with sharding constraints so GSPMD partitions the KV sequence).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_rope, dtype_of
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+def attn_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, cfg.n_heads, hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, cfg.n_kv_heads, hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, cfg.n_kv_heads, hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (cfg.n_heads, hd, d)) * (cfg.n_heads * hd) ** -0.5).astype(dt),
+    }
+
+
+def _qkv(params, x, positions, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    # K/V use "kv_seq" (default: replicated over seq): under sequence-
+    # parallel attention the queries stay seq-sharded while K/V are
+    # all-gathered ONCE per layer here, instead of reducing partial logits
+    # per (q,k) block.
+    k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _softcap(logits, cap: float):
+    if cap > 0.0:
+        logits = jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def full_attention(q, k, v, cfg: ModelConfig, q_offset: int = 0):
+    """Causal (optionally sliding-window) attention, grouped for GQA.
+
+    q: [B,S,Hq,hd], k/v: [B,T,Hkv,hd]; returns [B,S,Hq,hd]. fp32 softmax.
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    G = Hq // k.shape[2]
+    qg = q.reshape(B, S, k.shape[2], G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if cfg.sliding_window > 0:
+        mask &= kpos > qpos - cfg.sliding_window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, Hq, hd)
+
+
+CHUNK_Q = 1024
+CHUNK_K = 1024
+FULL_ATTN_MAX = 1024  # above this, use the chunked (flash-style) path
+
+
+def chunked_attention(q, k, v, cfg: ModelConfig, q_offset: int = 0,
+                      chunk_q: int = CHUNK_Q, chunk_k: int = CHUNK_K):
+    """Flash-style causal attention: double scan over (q, k) chunks with a
+    running max — never materializes an [S, T] matrix. Pure-jnp; the Pallas
+    kernel (kernels/flash_attention.py) is the TPU-optimized equivalent with
+    a triangular grid (this path computes all block pairs and masks).
+    """
+    B, S, Hq, hd = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    chunk_q = min(chunk_q, S)
+    chunk_k = min(chunk_k, T)
+    nq, nk = S // chunk_q, T // chunk_k
+    assert S % chunk_q == 0 and T % chunk_k == 0, (S, T, chunk_q, chunk_k)
+    qg = q.reshape(B, nq, chunk_q, Hkv, G, hd)
+    kc = k.reshape(B, nk, chunk_k, Hkv, hd)
+    vc = v.reshape(B, nk, chunk_k, Hkv, hd)
+    kpos_c = (jnp.arange(T) if T > 1 else jnp.zeros((1,), jnp.int32)).reshape(nk, chunk_k)
+    qpos_c = (jnp.arange(S) + q_offset).reshape(nq, chunk_q)
+    scale = hd ** -0.5
+
+    def q_block(_, xs):
+        qb, qpos = xs  # [B, chunk_q, Hkv, G, hd], [chunk_q]
+
+        def k_block(carry, kxs):
+            m, num, den = carry
+            kb, vb, kpos = kxs
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+            logits *= scale
+            logits = _softcap(logits, cfg.attn_logit_softcap)
+            mask = kpos[None, :] <= qpos[:, None]
+            if cfg.sliding_window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - cfg.sliding_window
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            num = num * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+            den = den * alpha + jnp.sum(p, axis=-1)
+            return (m_new, num, den), None
+
+        m0 = jnp.full((B, Hkv, G, chunk_q), -jnp.inf)
+        num0 = jnp.zeros((B, Hkv, G, chunk_q, hd), jnp.float32)
+        den0 = jnp.zeros((B, Hkv, G, chunk_q), jnp.float32)
+        (m, num, den), _ = jax.lax.scan(
+            k_block, (m0, num0, den0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpos_c))
+        out = num / jnp.maximum(den, 1e-30)[..., None]
+        # [B,Hkv,G,chunk_q,hd] -> [B,chunk_q,Hq,hd]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, chunk_q, Hq, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (qg.swapaxes(0, 1), qpos_c))
+    return outs.swapaxes(0, 1).reshape(B, S, Hq, hd)
+
+
+def attn_apply(params, x, positions, cfg: ModelConfig,
+               cache: Optional[Dict] = None, cache_index=None,
+               use_pallas: bool = False):
+    """Returns (out, new_cache). cache=None -> train/prefill w/o cache.
+
+    With a cache: if S==1 this is a decode step writing at cache_index;
+    otherwise prefill populating [0, S) and returning the filled cache.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-lane write positions (continuous batching)
+            lanes = jnp.arange(B)
+            ck = ck.at[lanes, cache_index].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[lanes, cache_index].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S == 1:
+            out = decode_attention(q, ck, cv, cache_index, cfg)
+            out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+            return constrain(out, "batch", "seq", "embed"), new_cache
+        k, v = ck[:, :S], cv[:, :S]
+    if use_pallas and S > 1:
+        from repro.kernels.ops import flash_attention as flash
+        out = flash(q, k, v, causal=True, window=cfg.sliding_window,
+                    softcap=cfg.attn_logit_softcap)
+    elif S > FULL_ATTN_MAX:
+        out = chunked_attention(q, k, v, cfg)
+    else:
+        out = full_attention(q, k, v, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def decode_attention(q, ck, cv, cache_index, cfg: ModelConfig):
+    """Single-token attention vs. full cache. q: [B,1,Hq,hd], ck/cv: [B,L,Hkv,hd].
+
+    The KV sequence may be sharded (long-context flash-decode); the fp32
+    softmax over the full length is expressed as max/sum reductions XLA turns
+    into cross-shard collectives.
+    """
+    B, _, Hq, hd = q.shape
+    L, Hkv = ck.shape[1], ck.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg, ck).astype(jnp.float32) * hd ** -0.5
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    idx = (cache_index[:, None, None, None]
+           if getattr(cache_index, "ndim", 0) == 1 else cache_index)
+    valid = jnp.arange(L)[None, None, None, :] <= idx
+    if cfg.sliding_window > 0:
+        valid &= jnp.arange(L)[None, None, None, :] > idx - cfg.sliding_window
+    logits = jnp.where(valid, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkh->bkgh", (p / denom).astype(q.dtype), cv)
+    return out.reshape(B, 1, Hq, hd)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStruct version of init_cache (for dry-run input_specs)."""
+    dt = dtype or dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dt),
+        "v": jax.ShapeDtypeStruct(shape, dt),
+    }

@@ -1,0 +1,149 @@
+"""Shared primitive layers: norms, activations, RoPE, FFN, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + partial/2d fraction)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig):
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    inv, rot = rope_freqs(cfg.resolved_head_dim, cfg.rope_fraction, cfg.rope_theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., seq, rot/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., seq, 1, rot/2]
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype) if rot < x.shape[-1] else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN: swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(ks[1], (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[0], (d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+def ffn_apply(params, x, act: str):
+    up = x @ params["w_up"]
+    up = constrain(up, "batch", "seq", "ffn")
+    if act == "swiglu":
+        g = x @ params["w_gate"]
+        h = jax.nn.silu(g) * up
+    elif act == "geglu":
+        g = x @ params["w_gate"]
+        h = jax.nn.gelu(g, approximate=True) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(act)
+    out = h @ params["w_down"]
+    return constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / heads
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    p = {"tok_embed": (jax.random.normal(ks[0], (V, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(ks[1], (cfg.d_model, V)) * cfg.d_model ** -0.5
+        ).astype(dt)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = (
+            jax.random.normal(ks[2], (cfg.frontend_dim, cfg.d_model)) * cfg.frontend_dim ** -0.5
+        ).astype(dt)
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 frontend_embeds: Optional[jnp.ndarray] = None):
+    """tokens: [B, S] int32. frontend_embeds: [B, F, frontend_dim] or None.
+
+    Modality stub: the first F positions are replaced by projected
+    frontend embeddings (vision patches / audio frames), matching the
+    assignment's "input_specs() provides precomputed embeddings".
+    """
+    x = jnp.take(params["tok_embed"], tokens, axis=0)
+    if frontend_embeds is not None:
+        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        nf = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, nf:]], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    w = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padded vocab entries so softmax/CE are exact
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, jnp.asarray(-2.3819763e38, logits.dtype), logits)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in fp32. logits [B,S,V], labels [B,S] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

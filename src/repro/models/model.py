@@ -1,0 +1,127 @@
+"""Top-level model API: init / loss / prefill / decode, per-arch input specs.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+suitable for jit/pjit. The modality frontends (vision patches, audio frames)
+are stubs per the assignment: ``input_specs`` supplies precomputed embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.layers import (
+    dtype_of, embed_init, embed_tokens, lm_logits, softmax_cross_entropy)
+
+FRONTEND_TOKENS = {"vision": 256, "audio": 64, "none": 0}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        k1, k2 = jax.random.split(key)
+        return {
+            "embed": embed_init(k1, self.cfg),
+            "stack": transformer.stack_init(k2, self.cfg),
+        }
+
+    def param_specs(self, key=None) -> Dict[str, Any]:
+        """Parameter ShapeDtypeStructs without allocating (for dry-run)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    # ------------------------------------------------------------ fwd
+    def forward(self, params, tokens, frontend_embeds=None, caches=None,
+                cache_index=None, return_state=False, use_pallas=False,
+                positions=None):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg, frontend_embeds)
+        if positions is None:
+            if cache_index is not None and tokens.shape[1] == 1:
+                if getattr(cache_index, "ndim", 0) == 1:  # per-lane positions
+                    positions = cache_index[:, None].astype(jnp.int32)
+                else:
+                    positions = jnp.full((tokens.shape[0], 1), cache_index,
+                                         jnp.int32)
+            else:
+                positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+        x, new_caches, aux = transformer.stack_apply(
+            params["stack"], x, positions, cfg, caches=caches,
+            cache_index=cache_index, return_state=return_state,
+            use_pallas=use_pallas)
+        logits = lm_logits(params["embed"], x, cfg)
+        return logits, new_caches, aux
+
+    # ----------------------------------------------------------- loss
+    def loss(self, params, batch, use_pallas=False):
+        """batch: {"tokens": [B,S], "labels": [B,S], optional "frontend_embeds",
+        optional "loss_mask"}. Returns (loss, metrics)."""
+        logits, _, aux = self.forward(
+            params, batch["tokens"], batch.get("frontend_embeds"),
+            use_pallas=use_pallas)
+        mask = batch.get("loss_mask")
+        ce = softmax_cross_entropy(logits, batch["labels"], mask)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -------------------------------------------------------- serving
+    def prefill(self, params, tokens, frontend_embeds=None, max_len=None,
+                use_pallas=False):
+        """Populate caches for [0, S); returns (last_logits, caches)."""
+        B, S = tokens.shape
+        max_len = max_len or S
+        caches = transformer.init_caches(self.cfg, B, max_len)
+        logits, caches, _ = self.forward(
+            params, tokens, frontend_embeds, caches=caches, cache_index=0,
+            return_state=True, use_pallas=use_pallas)
+        return logits[:, -1], caches
+
+    def decode_step(self, params, token, caches, cache_index):
+        """token: [B,1] int32; cache_index: scalar int32 (position to write).
+
+        Returns (logits [B,vocab], new_caches).
+        """
+        logits, new_caches, _ = self.forward(
+            params, token, caches=caches, cache_index=cache_index)
+        return logits[:, -1], new_caches
+
+    # ------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every input of the step function
+        that `shape` exercises (weak-type-correct, no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        nf = FRONTEND_TOKENS.get(cfg.frontend, 0)
+        if shape.kind == "train":
+            specs = {"tokens": tok((B, S)), "labels": tok((B, S))}
+            if nf:
+                specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (B, nf, cfg.frontend_dim), dtype_of(cfg))
+                specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": tok((B, S))}
+            if nf:
+                specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (B, nf, cfg.frontend_dim), dtype_of(cfg))
+            return specs
+        if shape.kind == "decode":
+            return {
+                "token": tok((B, 1)),
+                "caches": transformer.init_caches(cfg, B, S, spec=True),
+                "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        raise ValueError(shape.kind)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,355 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-form training) and sLSTM
+(scalar memory with recurrent memory mixing, sequential by construction).
+
+mLSTM training/prefill uses the stabilized parallel form (exponential
+input gates, cumulative log forget gates) computed in key-chunks with a
+running max — flash-attention-style, so no [S, S] matrix is materialized.
+Decode uses the O(d²) recurrent form with (C, n, m) state.
+
+sLSTM is inherently sequential (memory mixing via recurrent weights); we
+scan over time. This matches the xLSTM paper, which notes sLSTM cannot be
+parallelized and ships a fused kernel — our `lax.scan` is the TPU analogue.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dtype_of
+from repro.models.ssm import causal_conv1d
+
+MLSTM_CHUNK = 128
+CONV_K = 4
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    din = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    return din, din // cfg.n_heads
+
+
+def slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    return cfg.d_model, cfg.d_model // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    din, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    s_d, s_i = d ** -0.5, din ** -0.5
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d, din)) * s_d).astype(dt),
+        "gate_proj": (jax.random.normal(ks[1], (d, din)) * s_d).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (CONV_K, din)) * CONV_K ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((din,), dt),
+        "wq_x": (jax.random.normal(ks[3], (din, din)) * s_i).astype(dt),
+        "wk_x": (jax.random.normal(ks[4], (din, din)) * s_i).astype(dt),
+        "wv_x": (jax.random.normal(ks[5], (din, din)) * s_i).astype(dt),
+        "wi_x": (jax.random.normal(ks[6], (din, H)) * s_i).astype(jnp.float32),
+        "wf_x": (jax.random.normal(ks[7], (din, H)) * s_i).astype(jnp.float32),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "skip_scale": jnp.ones((din,), jnp.float32),
+        "down_proj": (jax.random.normal(ks[8], (din, d)) * s_i).astype(dt),
+    }
+
+
+def _mlstm_parallel(q, k, v, ig, fg, chunk: int = MLSTM_CHUNK):
+    """Stabilized parallel mLSTM. q,k,v: [B,H,S,dh]; ig,fg: [B,H,S] (logits).
+
+    h_t = (Σ_{s≤t} e^{G_ts - m_t} a_ts v_s) / max(|Σ e^{G_ts - m_t} a_ts|, e^{-m_t})
+    where G_ts = F_t - F_s + ĩ_s, F = cumsum(logsigmoid(f̃)), a = q·k/√dh.
+    Evaluated in key-chunks with running max — nothing [S,S] materialized.
+    """
+    B, H, S, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg)
+    F = jnp.cumsum(logf, axis=-1)  # [B,H,S]
+    g_src = F[..., None, :]  # per source s: F_s (subtract) and ĩ_s (add)
+    chunk = min(chunk, S)
+    nc = S // chunk
+    kc = k.reshape(B, H, nc, chunk, dh)
+    vc = v.reshape(B, H, nc, chunk, dh)
+    Fc = F.reshape(B, H, nc, chunk)
+    ic = ig.reshape(B, H, nc, chunk)
+    tpos = jnp.arange(S)
+
+    def step(carry, xs):
+        m, num, den = carry          # m,den: [B,H,S]; num: [B,H,S,dh]
+        kcb, vcb, Fcb, icb, spos = xs
+        a = jnp.einsum("bhtd,bhsd->bhts", q, kcb).astype(jnp.float32) * dh ** -0.5
+        G = F[..., :, None] - Fcb[..., None, :] + icb[..., None, :]
+        G = jnp.where(spos[None, None, None, :] <= tpos[None, None, :, None],
+                      G, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(G, axis=-1))
+        scale = jnp.exp(m - m_new)
+        w = jnp.exp(G - m_new[..., None]) * a
+        num = num * scale[..., None] + jnp.einsum(
+            "bhts,bhsd->bhtd", w, vcb.astype(jnp.float32))
+        den = den * scale + jnp.sum(w, axis=-1)
+        return (m_new, num, den), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf)
+    num0 = jnp.zeros((B, H, S, dh), jnp.float32)
+    den0 = jnp.zeros((B, H, S), jnp.float32)
+    spos = tpos.reshape(nc, chunk)
+    (m, num, den), _ = jax.lax.scan(
+        step, (m0, num0, den0),
+        (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+         Fc.transpose(2, 0, 1, 3), ic.transpose(2, 0, 1, 3), spos))
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+    return (num / norm[..., None]).astype(q.dtype)
+
+
+def mlstm_apply(params, x, cfg: ModelConfig,
+                state: Optional[Dict] = None, return_state: bool = False):
+    """x: [B,S,d]. state: {"C":[B,H,dh,dh],"n":[B,H,dh],"m":[B,H],"conv":...}."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    din, dh = mlstm_dims(cfg)
+    u = x @ params["up_proj"]
+    u = constrain(u, "batch", "seq", "ssm_inner")
+    z = x @ params["gate_proj"]
+    conv_state = state["conv"] if state is not None else None
+    c, new_conv = causal_conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+    c = jax.nn.silu(c)
+    q = (c @ params["wq_x"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (c @ params["wk_x"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    v = (u @ params["wv_x"]).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    ig = (c.astype(jnp.float32) @ params["wi_x"] + params["bi"]).transpose(0, 2, 1)
+    fg = (c.astype(jnp.float32) @ params["wf_x"] + params["bf"]).transpose(0, 2, 1)
+
+    new_state = None
+    if state is not None and S == 1:
+        h, new_state = _mlstm_recurrent_step(q, k, v, ig, fg, state)
+        new_state["conv"] = new_conv.astype(x.dtype)
+    else:
+        h = _mlstm_parallel(q, k, v, ig, fg)
+        if return_state or state is not None:
+            new_state = _mlstm_state_from_prefill(q, k, v, ig, fg, cfg)
+            new_state["conv"] = new_conv.astype(x.dtype)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, din)
+    h = h + params["skip_scale"].astype(h.dtype) * c
+    h = h * jax.nn.silu(z)
+    out = h @ params["down_proj"]
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+def _mlstm_recurrent_step(q, k, v, ig, fg, state):
+    """One decode step. q,k,v: [B,H,1,dh]; ig,fg: [B,H,1]."""
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    qs, ks, vs = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    logf = jax.nn.log_sigmoid(fg[..., 0])
+    i = ig[..., 0]
+    m_new = jnp.maximum(logf + m, i)
+    fs = jnp.exp(logf + m - m_new)[..., None]
+    is_ = jnp.exp(i - m_new)[..., None]
+    C = C * fs[..., None] + is_[..., None] * (vs[..., :, None] * ks[..., None, :])
+    n = n * fs + is_ * ks
+    num = jnp.einsum("bhde,bhe->bhd", C, qs * dh ** -0.5)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * qs * dh ** -0.5, axis=-1)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None])[:, :, None, :].astype(q.dtype)
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def _mlstm_state_from_prefill(q, k, v, ig, fg, cfg):
+    """Final (C, n, m) state after a prefill (for decode continuation)."""
+    B, H, S, dh = k.shape
+    logf = jax.nn.log_sigmoid(fg)
+    F = jnp.cumsum(logf, axis=-1)
+    Ftot = F[..., -1:]
+    g = (Ftot - F + ig).astype(jnp.float32)  # weight of source s in final state
+    m = jnp.max(g, axis=-1)
+    w = jnp.exp(g - m[..., None])
+    C = jnp.einsum("bhs,bhsd,bhse->bhde", w, v.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    n = jnp.einsum("bhs,bhsd->bhd", w, k.astype(jnp.float32))
+    return {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = int(cfg.xlstm.proj_factor_slstm * d)
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    p = {}
+    for i, name in enumerate(("wi", "wf", "wz", "wo_g")):
+        p[name] = (jax.random.normal(ks[i], (d, d)) * s).astype(jnp.float32)
+    for i, name in enumerate(("ri", "rf", "rz", "ro")):
+        # block-diagonal recurrent (memory mixing within heads)
+        p[name] = (jax.random.normal(ks[4 + i], (H, dh, dh)) * dh ** -0.5).astype(jnp.float32)
+    p["bi"] = jnp.zeros((d,), jnp.float32)
+    p["bf"] = jnp.full((d,), 3.0, jnp.float32)
+    p["bz"] = jnp.zeros((d,), jnp.float32)
+    p["bo"] = jnp.zeros((d,), jnp.float32)
+    p["up_proj"] = (jax.random.normal(ks[8], (d, 2 * dff)) * s).astype(dt)
+    p["down_proj"] = (jax.random.normal(ks[9], (dff, d)) * dff ** -0.5).astype(dt)
+    return p
+
+
+def _slstm_cell(r_all, pre, carry, H):
+    """One sLSTM step.
+
+    pre: [B, 4, d] PRECOMPUTED input preactivations (x@W + b for i/f/z/o) —
+    hoisted out of the recurrence so the [d, d] input weights are read once
+    per sequence instead of once per timestep (the 4096x HBM-traffic bug
+    found in the train_4k roofline; see EXPERIMENTS.md §Perf xlstm #1).
+    r_all: [4, H, dh, dh] pre-stacked recurrent weights — stacked OUTSIDE the
+    scan (stacking in-cell copied 16MB/timestep; §Perf xlstm #2).
+    carry: (c, n, m, h).
+    """
+    c, n, m, h = carry
+    B = pre.shape[0]
+    d = pre.shape[-1]
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    pre = pre.astype(jnp.float32)
+
+    # one stacked recurrent einsum for all four gates (fewer, larger ops)
+    rec = jnp.einsum("bhk,ghkl->gbhl", hh, r_all).reshape(4, B, d)
+
+    i_t = pre[:, 0] + rec[0]
+    f_t = pre[:, 1] + rec[1]
+    z_t = jnp.tanh(pre[:, 2] + rec[2])
+    o_t = jax.nn.sigmoid(pre[:, 3] + rec[3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    c = c * jnp.exp(logf + m - m_new) + jnp.exp(i_t - m_new) * z_t
+    n = n * jnp.exp(logf + m - m_new) + jnp.exp(i_t - m_new)
+    h = o_t * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h)
+
+
+def _slstm_preact(params, x32):
+    """Input preactivations for the whole sequence: [B,S,4,d] in bf16.
+
+    bf16 storage halves the scan-input traffic; the cell upcasts to fp32
+    (gate math stays fp32 — only the *preactivations* round through bf16,
+    matching standard mixed-precision practice)."""
+    w = jnp.stack([params["wi"], params["wf"], params["wz"],
+                   params["wo_g"]], axis=0)               # [4,d,d]
+    b = jnp.stack([params["bi"], params["bf"], params["bz"],
+                   params["bo"]], axis=0)                 # [4,d]
+    return (jnp.einsum("bsd,gdl->bsgl", x32, w) + b).astype(jnp.bfloat16)
+
+
+# §Perf xlstm iteration log (EXPERIMENTS.md): manual hoisting of the input
+# projections out of the recurrence was REFUTED by measurement — XLA's
+# while-loop invariant/batched-dot motion already hoists them, and the
+# manually materialized [B,S,4,d] preactivation tensor ADDS pad/copy traffic
+# in the scan body (legacy 4872s vs hoisted 6366s vs hoisted-bf16 6108s on
+# train_4k, v2 meter). Default False = in-loop form, compiler-hoisted.
+LEGACY_SLSTM_INNER_PROJ = True  # "legacy" measures better; see above
+
+
+def slstm_apply(params, x, cfg: ModelConfig,
+                state: Optional[Dict] = None, return_state: bool = False,
+                use_pallas: bool = False):
+    """x: [B,S,d]. Sequential scan over time. state: {"c","n","m","h"} [B,d]."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    x32 = x.astype(jnp.float32)
+    if state is None:
+        carry = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+                 jnp.full((B, d), -jnp.inf, jnp.float32), jnp.zeros((B, d), jnp.float32))
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+
+    r_all = jnp.stack([params["ri"], params["rf"], params["rz"],
+                       params["ro"]])   # hoisted: stacked once per layer
+
+    if use_pallas and S > 1:
+        from repro.kernels.ops import slstm_scan
+        dh = d // H
+        pre = _slstm_preact(params, x32)
+        shaped = [s.reshape(B, H, dh) for s in carry]
+        hs, (cT, nT, mT, hT) = slstm_scan(pre, r_all, *shaped)
+        h = hs.astype(x.dtype)
+        u = h @ params["up_proj"]
+        a, b = jnp.split(u, 2, axis=-1)
+        out = (jax.nn.gelu(a, approximate=True) * b) @ params["down_proj"]
+        out = constrain(out, "batch", "seq", "embed")
+        new_state = None
+        if return_state or state is not None:
+            new_state = {"c": cT.reshape(B, d), "n": nT.reshape(B, d),
+                         "m": mT.reshape(B, d), "h": hT.reshape(B, d)}
+        return out, new_state
+
+    if LEGACY_SLSTM_INNER_PROJ:
+        w = jnp.stack([params["wi"], params["wf"], params["wz"],
+                       params["wo_g"]], axis=0)
+        b = jnp.stack([params["bi"], params["bf"], params["bz"],
+                       params["bo"]], axis=0)
+
+        def step(carry, xt):
+            pre_t = jnp.einsum("bd,gdl->bgl", xt, w) + b  # in-loop W reads
+            carry = _slstm_cell(r_all, pre_t, carry, H)
+            return carry, carry[3]
+
+        carry, hs = jax.lax.scan(step, carry, x32.swapaxes(0, 1))
+    else:
+        # hoisted: one GEMM for all timesteps
+        pre = _slstm_preact(params, x32)
+
+        def step(carry, pre_t):
+            carry = _slstm_cell(r_all, pre_t, carry, H)
+            return carry, carry[3]
+
+        carry, hs = jax.lax.scan(step, carry, pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # [B,S,d]
+    # post-up-projection gated FFN (factor 4/3)
+    u = h @ params["up_proj"]
+    a, b = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.gelu(a, approximate=True) * b) @ params["down_proj"]
+    out = constrain(out, "batch", "seq", "embed")
+    new_state = None
+    if return_state or state is not None:
+        c, n, m, hl = carry
+        new_state = {"c": c, "n": n, "m": m, "h": hl}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# States
+# ---------------------------------------------------------------------------
+
+def init_xlstm_state(cfg: ModelConfig, batch: int, kind: str):
+    if kind == "mlstm":
+        din, dh = mlstm_dims(cfg)
+        H = cfg.n_heads
+        return {
+            "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, CONV_K - 1, din), dtype_of(cfg)),
+        }
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def xlstm_state_spec(cfg: ModelConfig, batch: int, kind: str):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        init_xlstm_state(cfg, batch, kind))

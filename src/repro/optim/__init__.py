@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, OptState, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "global_norm"]

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+States (m, v) are fp32 regardless of parameter dtype; parameters stay in the
+model dtype (bf16) with fp32 update math — the standard mixed-precision
+recipe. Optimizer-state sharding (ZeRO-1) is decided by the caller via
+``distributed.sharding.zero1_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray           # int32 scalar
+    m: Any                      # fp32 pytree like params
+    v: Any                      # fp32 pytree like params
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * warm * cos
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Any = 3e-4      # float or schedule fn(step)->lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(self, grads, state: OptState, params) -> Tuple[Any, OptState, Dict]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.grad_clip > 0:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        lr = (self.learning_rate(step) if callable(self.learning_rate)
+              else jnp.asarray(self.learning_rate, jnp.float32))
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                                   state.m, grads)
+        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                                   state.v, grads)
+        c1 = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        c2 = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def upd(p, mm, vv):
+            u = (mm * c1) / (jnp.sqrt(vv * c2) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:  # no decay on norms/bias
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, OptState(step=step, m=m, v=v), {
+            "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeRequest, ServingEngine
+
+__all__ = ["ServeRequest", "ServingEngine"]

@@ -1,0 +1,178 @@
+"""Continuous-batching serving engine — multilevel scheduling for inference.
+
+The paper's result (§5.3): aggregating many short tasks into one
+scheduler-visible job recovers >90% utilization. For serving, a "task" is
+one decode step of one request (milliseconds) and the "scheduler latency"
+t_s is the per-dispatch overhead (Python driver + jit dispatch + launch).
+Dispatching each request separately puts you in the paper's Case 2
+(t ~< t_s); batching B requests into one ``serve_step`` dispatch is exactly
+mimo-mode LLMapReduce bundling. benchmarks/dispatch_latency.py measures both
+regimes and fits the same U(t) model.
+
+Admission control reuses the core scheduler: each decode *lane* is a slot in
+a ResourceManager; requests are single-task jobs placed FIFO. Lanes run
+asynchronously (per-lane cache positions), i.e. continuous batching — a
+finished request frees its lane immediately for the next admission.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.job import Job, ResourceRequest
+from repro.core.resources import ResourceManager
+from repro.models import build_model
+from repro.models.transformer import init_caches
+
+_req_ids = itertools.count(1)
+
+
+@dataclass
+class ServeRequest:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_token: int = -1
+    request_id: int = field(default_factory=lambda: next(_req_ids))
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    submit_time: float = 0.0
+    first_token_time: float = 0.0
+    done_time: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return (len(self.output) >= self.max_new_tokens
+                or (self.eos_token >= 0 and self.output
+                    and self.output[-1] == self.eos_token))
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, lanes: int = 8,
+                 max_len: int = 512, greedy: bool = True, donate: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.lanes = lanes
+        self.max_len = max_len
+        self.greedy = greedy
+        # lane state
+        self.caches = init_caches(cfg, lanes, max_len)
+        self.positions = np.zeros((lanes,), np.int32)   # next write index
+        self.lane_req: List[Optional[ServeRequest]] = [None] * lanes
+        self.active_mask = np.zeros((lanes,), bool)
+        self.pending: List[ServeRequest] = []
+        # admission control via the core scheduler's resource manager
+        self.rm = ResourceManager()
+        self.rm.add_nodes(lanes, slots=1)
+        self._decode = jax.jit(
+            self._decode_fn, donate_argnums=(1,) if donate else ())
+        self._prefill_one = jax.jit(self._prefill_fn)
+        self.steps = 0
+        self.decode_tokens = 0
+
+    # ----------------------------------------------------------- jitted
+    def _decode_fn(self, params, caches, tokens, positions):
+        logits, caches = self.model.decode_step(params, tokens, caches,
+                                                positions)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    def _prefill_fn(self, params, tokens):
+        """Prefill one request padded to max_len-sized lane cache."""
+        last, caches = self.model.prefill(self.params, tokens,
+                                          max_len=self.max_len)
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    # ------------------------------------------------------------ admit
+    def submit(self, req: ServeRequest) -> None:
+        req.submit_time = time.time()
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        while self.pending:
+            free = [i for i in range(self.lanes) if not self.active_mask[i]]
+            if not free:
+                return
+            lane = free[0]
+            req = self.pending.pop(0)
+            task_job = Job.array(1, name=f"req{req.request_id}")
+            self.rm.allocate(task_job.tasks[0], lane)
+            self._lane_jobs = getattr(self, "_lane_jobs", {})
+            self._lane_jobs[lane] = task_job.tasks[0]
+            # prefill into this lane
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            next_tok, new_caches = self._prefill_one(self.params, prompt)
+            self._scatter_lane(lane, new_caches)
+            tok = int(next_tok[0])
+            req.output.append(tok)
+            req.first_token_time = time.time()
+            self.positions[lane] = len(req.prompt)
+            self.lane_req[lane] = req
+            self.active_mask[lane] = True
+
+    def _scatter_lane(self, lane: int, src_caches) -> None:
+        """Copy a 1-lane cache pytree into lane `lane` of the engine cache."""
+        def scat(dst, src):
+            if dst.ndim == src.ndim and dst.shape[1] == self.lanes:
+                return dst.at[:, lane].set(src[:, 0].astype(dst.dtype))
+            return dst
+        self.caches = jax.tree_util.tree_map(scat, self.caches, src_caches)
+
+    # ------------------------------------------------------------- step
+    def step(self) -> int:
+        """Admit + one batched decode step; returns #active lanes."""
+        self._admit()
+        active = np.nonzero(self.active_mask)[0]
+        if len(active) == 0:
+            return 0
+        tokens = np.zeros((self.lanes, 1), np.int32)
+        for i in range(self.lanes):
+            r = self.lane_req[i]
+            if r is not None:
+                tokens[i, 0] = r.output[-1]
+        next_tok, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.positions))
+        next_np = np.asarray(next_tok)
+        self.steps += 1
+        self.decode_tokens += len(active)
+        for lane in active:
+            req = self.lane_req[lane]
+            req.output.append(int(next_np[lane]))
+            self.positions[lane] += 1
+            if req.done or self.positions[lane] >= self.max_len - 1:
+                req.done_time = time.time()
+                self.active_mask[lane] = False
+                self.lane_req[lane] = None
+                task = self._lane_jobs.pop(lane, None)
+                if task is not None:
+                    self.rm.release(task)
+        return len(active)
+
+    def run(self, requests: Sequence[ServeRequest]) -> Dict:
+        """Serve a batch of requests to completion; returns summary stats."""
+        t0 = time.time()
+        for r in requests:
+            self.submit(r)
+        while self.pending or self.active_mask.any():
+            self.step()
+        wall = time.time() - t0
+        lat = [r.done_time - r.submit_time for r in requests]
+        return {
+            "wall_s": wall,
+            "requests": len(requests),
+            "decode_steps": self.steps,
+            "decode_tokens": self.decode_tokens,
+            "tokens_per_dispatch": self.decode_tokens / max(self.steps, 1),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "throughput_tok_s": self.decode_tokens / max(wall, 1e-9),
+        }

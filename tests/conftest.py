@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run against a single CPU device (the dry-run sets its own 512-device
+# flag in its own process). Keep compile times sane.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

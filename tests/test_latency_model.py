@@ -1,0 +1,93 @@
+"""The paper's §4 latency/utilization model + the Table-10 reproduction.
+
+These are the paper's own quantitative claims, validated end-to-end against
+our scheduler implementation running the Table-9 task sets (reduced P for
+test speed; the full 1408-slot runs live in benchmarks/).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FAMILIES, Job, ResourceManager, Scheduler, delta_t, fit_power_law,
+    utilization_approx, utilization_constant, utilization_variable)
+from repro.core.latency_model import estimate_variable_from_constant
+
+
+def test_delta_t_power_law():
+    assert delta_t(1, 2.2, 1.3) == pytest.approx(2.2)
+    assert delta_t(10, 2.0, 1.0) == pytest.approx(20.0)
+    # alpha > 1 is superlinear
+    assert delta_t(100, 1.0, 1.3) > 100
+
+
+def test_utilization_models_consistent():
+    # alpha == 1: exact and approximate forms coincide
+    for t in (1.0, 5.0, 30.0, 60.0):
+        exact = utilization_constant(t, 48, 2.2, 1.0)
+        approx = utilization_approx(t, 2.2)
+        assert exact == pytest.approx(approx, rel=1e-9)
+
+
+def test_paper_half_utilization_claim():
+    """t_s ~= t  =>  U_c ~= 0.5 (paper §4)."""
+    assert utilization_approx(2.2, 2.2) == pytest.approx(0.5)
+
+
+def test_fit_power_law_recovers_parameters():
+    n = np.array([4, 8, 48, 240])
+    dt = 2.2 * n ** 1.3
+    fit = fit_power_law(n, dt)
+    assert fit.t_s == pytest.approx(2.2, rel=1e-6)
+    assert fit.alpha_s == pytest.approx(1.3, rel=1e-6)
+    assert fit.r2 > 0.999999
+
+
+def test_fit_power_law_noisy():
+    rng = np.random.default_rng(0)
+    n = np.array([4, 8, 48, 240])
+    dt = 3.0 * n ** 1.2 * np.exp(rng.normal(0, 0.05, 4))
+    fit = fit_power_law(n, dt)
+    assert fit.t_s == pytest.approx(3.0, rel=0.3)
+    assert fit.alpha_s == pytest.approx(1.2, abs=0.1)
+
+
+def _run_taskset(profile, n, t, P=352):
+    rm = ResourceManager()
+    rm.add_nodes(P, slots=1)
+    s = Scheduler(rm, profile=profile)
+    job = Job.array(n * P, duration=t)
+    s.submit(job)
+    s.run()
+    st = s.stats[job.job_id]
+    return (st.last_end - st.submit_time) - t * n
+
+
+@pytest.mark.parametrize("family", ["slurm", "grid_engine", "mesos", "yarn"])
+def test_table10_family_fit_reasonable(family):
+    """Fitting our simulated Delta-T reproduces the paper's Table-10 t_s
+    within a factor ~2 at reduced P=352. NOTE: alpha_s is scale-dependent —
+    the super-linear term comes from queue-depth-proportional dispatch cost
+    (~P^2), so at P=352 alpha sits below its P=1408 value; the full-size
+    alpha reproduction is benchmarks/table10_model_fit.py."""
+    prof = FAMILIES[family]
+    grid = ((4, 60), (8, 30), (48, 5)) if family == "yarn" else \
+        ((4, 60), (8, 30), (48, 5), (240, 1))
+    ns, dts = zip(*[(n, _run_taskset(prof, n, t)) for n, t in grid])
+    fit = fit_power_law(ns, dts)
+    assert 0.4 * prof.target_ts < fit.t_s < 2.5 * prof.target_ts, fit
+    assert prof.target_alpha - 0.45 < fit.alpha_s < prof.target_alpha + 0.2, fit
+    assert fit.r2 > 0.97, fit
+
+
+def test_variable_task_utilization_predicted_by_constant_curve():
+    """Paper §4: U for variable task times ~= harmonic mean of U_c at the
+    per-processor mean task time."""
+    t_s = 2.0
+    curve_t = np.linspace(0.5, 100, 400)
+    curve_u = utilization_approx(curve_t, t_s)
+    rng = np.random.default_rng(1)
+    per_proc = [list(rng.uniform(1, 30, size=20)) for _ in range(16)]
+    pred = estimate_variable_from_constant(
+        curve_t, curve_u, [float(np.mean(p)) for p in per_proc])
+    exact = utilization_variable(per_proc, t_s)
+    assert pred == pytest.approx(exact, rel=0.05)

@@ -1,0 +1,129 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EventLoop, FAMILIES, Job, JobState, LatencyProfile, ResourceManager,
+    Scheduler, aggregate, fit_power_law, utilization_constant)
+from repro.core.multilevel import MultilevelConfig, bundle_durations
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, completion_cost=1e-5,
+                      startup_cost=1e-3, cycle_interval=1e-3)
+
+
+# ---------------------------------------------------------------- scheduler
+@settings(max_examples=30, deadline=None)
+@given(
+    nodes=st.integers(1, 16),
+    slots=st.integers(1, 4),
+    n_tasks=st.integers(1, 60),
+    duration=st.floats(0.01, 5.0),
+)
+def test_scheduler_conservation(nodes, slots, n_tasks, duration):
+    """Every task completes exactly once; resources fully released; no
+    processor runs more than its share concurrently."""
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots)
+    s = Scheduler(rm, profile=FAST)
+    job = Job.array(n_tasks, duration=duration)
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert job.completed_tasks == n_tasks
+    # all resources released
+    for node in rm.nodes.values():
+        assert node.free_slots == node.slots
+        assert not node.running
+    # makespan lower bound: ceil(tasks / total_slots) * duration
+    st_ = s.stats[job.job_id]
+    waves = math.ceil(n_tasks / (nodes * slots))
+    assert st_.last_end - st_.submit_time >= waves * duration - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tasks=st.integers(1, 300),
+    slots=st.integers(1, 64),
+    duration=st.floats(0.01, 3.0),
+)
+def test_multilevel_aggregation_invariants(n_tasks, slots, duration):
+    """Aggregation preserves total task-seconds and never exceeds the slot
+    count in bundles; bundle durations bound the originals."""
+    job = Job.array(n_tasks, duration=duration)
+    cfg = MultilevelConfig()
+    bundled = aggregate(job, slots, cfg)
+    assert bundled.n_tasks <= min(slots, n_tasks)
+    # work conservation (modulo modeled overheads)
+    base = n_tasks * duration
+    tot = sum(t.duration for t in bundled.tasks)
+    overhead = (bundled.n_tasks * cfg.app_startup
+                + n_tasks * cfg.per_task_overhead_mimo)
+    assert tot == pytest.approx(base + overhead, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t_s=st.floats(0.01, 50.0),
+    alpha=st.floats(0.8, 1.8),
+)
+def test_power_law_fit_inverts_model(t_s, alpha):
+    n = np.array([2.0, 4, 8, 32, 128, 512])
+    dt = t_s * n ** alpha
+    fit = fit_power_law(n, dt)
+    assert fit.t_s == pytest.approx(t_s, rel=1e-6)
+    assert fit.alpha_s == pytest.approx(alpha, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.floats(0.1, 1000),
+    n=st.integers(1, 1000),
+    t_s=st.floats(0.001, 100),
+    alpha=st.floats(0.8, 1.6),
+)
+def test_utilization_bounded_and_monotone(t, n, t_s, alpha):
+    u = float(utilization_constant(t, n, t_s, alpha))
+    assert 0.0 < u <= 1.0
+    # longer tasks always utilize better
+    u2 = float(utilization_constant(t * 2, n, t_s, alpha))
+    assert u2 >= u - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_event_loop_time_monotone(data):
+    """Events always fire in non-decreasing time order."""
+    loop = EventLoop()
+    times = data.draw(st.lists(st.floats(0, 100), min_size=1, max_size=50))
+    fired = []
+    for t in times:
+        loop.at(t, lambda tt=t: fired.append(loop.now))
+    loop.run()
+    assert fired == sorted(fired)
+    assert len(fired) == len(times)
+
+
+# ---------------------------------------------------------------- model math
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.sampled_from([32, 64, 128]),
+    chunk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_chunked_attention_equals_full_property(seq, chunk, seed):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import chunked_attention, full_attention
+    cfg = ModelConfig(n_heads=2, n_kv_heads=2, head_dim=16)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (1, seq, 2, 16), jnp.float32)
+    k = jax.random.normal(k2, (1, seq, 2, 16), jnp.float32)
+    v = jax.random.normal(k3, (1, seq, 2, 16), jnp.float32)
+    a = chunked_attention(q, k, v, cfg, chunk_q=chunk, chunk_k=chunk)
+    b = full_attention(q, k, v, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4,
+                               rtol=3e-4)

@@ -1,0 +1,234 @@
+"""Scheduler engine behaviour: the paper's four functions + policies."""
+import pytest
+
+from repro.core import (
+    BackfillPolicy, BinPackingPolicy, EventLoop, FIFOPolicy, Job, JobState,
+    LatencyProfile, LocalityPolicy, ResourceManager, ResourceRequest,
+    Scheduler, SchedulerConfig, TaskState)
+from repro.core.policies import LocalityHint
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, completion_cost=1e-5,
+                      startup_cost=1e-3, cycle_interval=1e-3)
+
+
+def make_sched(nodes=4, slots=1, policy=None, profile=FAST, config=None,
+               mem_mb=1 << 20):
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots, mem_mb=mem_mb)
+    return Scheduler(rm, policy=policy, profile=profile, config=config)
+
+
+def test_job_array_completes():
+    s = make_sched(nodes=4)
+    job = Job.array(16, duration=1.0)
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert job.completed_tasks == 16
+    # 16 tasks on 4 slots, 1s each -> ~4s + overheads
+    st = s.stats[job.job_id]
+    assert 4.0 <= st.last_end - st.submit_time < 5.0
+
+
+def test_fifo_ordering_within_priority():
+    s = make_sched(nodes=1)
+    a = Job.array(1, duration=1.0, name="a")
+    b = Job.array(1, duration=1.0, name="b")
+    s.submit(a)
+    s.submit(b)
+    s.run()
+    assert a.tasks[0].start_time < b.tasks[0].start_time
+
+
+def test_priority_beats_fifo():
+    s = make_sched(nodes=1)
+    lo = Job.array(2, duration=1.0, priority=0.0, name="lo")
+    hi = Job.array(2, duration=1.0, priority=10.0, name="hi")
+    s.submit(lo)   # submitted first...
+    s.submit(hi)   # ...but hi must run its tasks before lo's second task
+    s.run()
+    assert hi.state is JobState.COMPLETED
+    hi_end = max(t.end_time for t in hi.tasks)
+    lo_last_start = max(t.start_time for t in lo.tasks)
+    assert hi_end < lo_last_start + 1.5  # hi didn't wait for all of lo
+
+
+def test_dag_dependency_gates_execution():
+    s = make_sched(nodes=2)
+    first = Job.array(2, duration=1.0, name="map")
+    second = Job.array(1, duration=0.5, name="reduce")
+    second.depends_on = (first.job_id,)
+    s.submit(second)  # submitted before its dependency completes
+    s.submit(first)
+    s.run()
+    assert second.state is JobState.COMPLETED
+    assert min(t.start_time for t in second.tasks) >= \
+        max(t.end_time for t in first.tasks)
+
+
+def test_gang_parallel_all_or_nothing():
+    s = make_sched(nodes=4)
+    filler = Job.array(2, duration=5.0, name="filler")
+    gang = Job.parallel_job(4, duration=1.0, name="gang")
+    s.submit(filler)
+    s.submit(gang)
+    s.run()
+    assert gang.state is JobState.COMPLETED
+    starts = [t.start_time for t in gang.tasks]
+    # gang: all 4 tasks co-start (needs all 4 nodes => after filler done)
+    assert max(starts) - min(starts) < 0.5
+    assert min(starts) >= max(t.end_time for t in filler.tasks) - 1e-6
+
+
+def test_resource_request_memory_respected():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=4, mem_mb=1000)
+    s = Scheduler(rm, profile=FAST)
+    fat = Job.array(4, duration=1.0,
+                    request=ResourceRequest(slots=1, mem_mb=800))
+    s.submit(fat)
+    s.run()
+    # only one 800MB task fits per 1000MB node -> 2 waves of 2
+    assert fat.state is JobState.COMPLETED
+    starts = sorted(t.start_time for t in fat.tasks)
+    assert starts[2] >= starts[0] + 1.0
+
+
+def test_licenses_are_consumable():
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    rm.add_license("matlab", 1)
+    s = Scheduler(rm, policy=BinPackingPolicy(), profile=FAST)
+    job = Job.array(3, duration=1.0,
+                    request=ResourceRequest(licenses=("matlab",)))
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    starts = sorted(t.start_time for t in job.tasks)
+    # serialized by the single license despite 4 free nodes
+    assert starts[1] >= starts[0] + 1.0 and starts[2] >= starts[1] + 1.0
+
+
+def test_backfill_lets_small_jobs_skip_blocked_gang():
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, policy=BackfillPolicy(), profile=FAST)
+    filler = Job.array(2, duration=10.0, name="filler")
+    gang = Job.parallel_job(4, duration=1.0, name="gang")   # blocked head
+    small = Job.array(2, duration=1.0, name="small")        # backfillable
+    s.submit(filler)
+    s.submit(gang)
+    s.submit(small)
+    s.run()
+    assert small.state is JobState.COMPLETED
+    # small ran while gang was still waiting for the filler nodes
+    assert max(t.end_time for t in small.tasks) < \
+        min(t.start_time for t in gang.tasks)
+
+
+def test_binpacking_prefers_fuller_nodes():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=4)
+    s = Scheduler(rm, policy=BinPackingPolicy(), profile=FAST)
+    # pre-load node 0 with 2 long tasks
+    pre = Job.array(2, duration=50.0)
+    s.submit(pre)
+    s.loop.run(until=1.0)
+    nodes_used = {t.node_id for t in pre.tasks}
+    job = Job.array(2, duration=1.0)
+    s.submit(job)
+    s.run(until=10.0)
+    # best-fit packs onto the already-loaded node (if pre landed on one node)
+    if len(nodes_used) == 1:
+        assert {t.node_id for t in job.tasks} == nodes_used
+
+
+def test_locality_policy_prefers_hinted_nodes():
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=2)
+    job = Job.array(2, duration=1.0)
+    policy = LocalityPolicy(hints={job.job_id: LocalityHint({3: 5.0})})
+    s = Scheduler(rm, policy=policy, profile=FAST)
+    s.submit(job)
+    s.run()
+    assert all(t.node_id == 3 for t in job.tasks)
+
+
+def test_node_failure_restarts_tasks():
+    s = make_sched(nodes=2)
+    job = Job.array(2, duration=4.0)
+    job.max_restarts = 2
+    s.submit(job)
+    s.loop.run(until=2.0)
+    running_node = job.tasks[0].node_id
+    s.fail_node(running_node)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert any(t.attempts > 1 for t in job.tasks)
+
+
+def test_node_failure_without_restart_budget_fails_task():
+    s = make_sched(nodes=2)
+    job = Job.array(2, duration=4.0)   # max_restarts = 0
+    s.submit(job)
+    s.loop.run(until=2.0)
+    s.fail_node(job.tasks[0].node_id)
+    s.run()
+    assert job.failed_tasks >= 1
+    assert job.state is JobState.FAILED
+
+
+def test_speculative_execution_mitigates_straggler():
+    cfg = SchedulerConfig(speculative=True, speculative_factor=3.0)
+    s = make_sched(nodes=8, config=cfg)
+    durations = [1.0] * 15 + [50.0]          # one straggler
+    job = Job.array(16, durations=durations)
+    s.submit(job)
+    s.run(until=2000.0)
+    assert job.state is JobState.COMPLETED
+    clones = [t for t in job.tasks if t.speculative_of is not None]
+    # a clone was launched for the straggler; completion didn't wait 50s?
+    # (clone has the same duration here, so completion time ~ straggler's
+    # clone start + 50 — the point is the mechanism fires and bookkeeping
+    # stays consistent)
+    assert clones, "speculative clone should have been launched"
+    assert job.completed_tasks == 16
+
+
+def test_preemption_gives_resources_to_high_priority():
+    cfg = SchedulerConfig(preemption=True)
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, policy=BackfillPolicy(), profile=FAST, config=cfg)
+    lo = Job.array(2, duration=100.0, priority=0.0, name="lo")
+    s.submit(lo)
+    s.loop.run(until=1.0)
+    hi = Job.array(2, duration=1.0, priority=10.0, name="hi")
+    s.submit(hi)
+    s.run(until=300.0)
+    assert hi.state is JobState.COMPLETED
+    assert max(t.end_time for t in hi.tasks) < 20.0  # didn't wait 100s
+    # preempted lo tasks were requeued and finish later
+    s.run()
+    assert lo.state is JobState.COMPLETED
+
+
+def test_utilization_accounting():
+    s = make_sched(nodes=4)
+    job = Job.array(8, duration=2.0)
+    s.submit(job)
+    s.run()
+    u = s.utilization([job.job_id])
+    assert 0.7 < u <= 1.0
+
+
+def test_scale_100k_slots():
+    """Large-scale runnability: the control plane handles 100k slots."""
+    rm = ResourceManager()
+    rm.add_nodes(1000, slots=100)   # 100k slots
+    s = Scheduler(rm, profile=FAST)
+    job = Job.array(100_000, duration=30.0)
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert job.completed_tasks == 100_000

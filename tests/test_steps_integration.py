@@ -1,0 +1,104 @@
+"""Integration: launch/steps builders lower+compile+run on the host mesh
+with smoke configs (the dry-run covers the 512-device production meshes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (
+    build_decode_step, build_prefill_step, build_train_step, pad_heads_for_tp)
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["phi4_mini_3_8b", "jamba_v01_52b",
+                                  "granite_moe_1b_a400m"])
+def test_train_step_builder_runs(arch):
+    cfg = get_smoke_config(arch)
+    mesh = make_host_mesh()
+    shape = ShapeConfig("t", "train", 32, 4)
+    built = build_train_step(cfg, mesh, shape)
+    step = built.jit()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.optim import AdamW
+    opt = AdamW()
+    state = {"params": params, "opt": opt.init(params)}
+    batch = {
+        "tokens": jnp.zeros((4, 32), jnp.int32),
+        "labels": jnp.zeros((4, 32), jnp.int32),
+    }
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_prefill_and_decode_builders_run():
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    mesh = make_host_mesh()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pre = build_prefill_step(cfg, mesh, ShapeConfig("p", "prefill", 32, 2))
+    logits, caches = pre.jit()(params, {"tokens": jnp.zeros((2, 32), jnp.int32)})
+    assert logits.shape == (2, cfg.padded_vocab)
+    dec = build_decode_step(cfg, mesh, ShapeConfig("d", "decode", 32, 2))
+    lg, caches = dec.jit()(params, jnp.zeros((2, 1), jnp.int32), caches,
+                           jnp.int32(32 - 1))
+    assert lg.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+def test_multistep_decode_matches_stepwise():
+    """k-step aggregated dispatch == k sequential greedy decode steps."""
+    cfg = get_smoke_config("gemma_2b")
+    mesh = make_host_mesh()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    _, caches = model.prefill(params, toks, max_len=32)
+
+    # stepwise reference
+    caches_ref = caches
+    tok = jnp.argmax(model.decode_step(params, toks[:, -1:], caches_ref,
+                                       jnp.int32(7))[0], -1)[:, None] \
+        .astype(jnp.int32)
+    # NOTE: decode_step above wrote position 7 (last prompt token index);
+    # rebuild to keep both paths identical
+    _, caches_ref = model.prefill(params, toks, max_len=32)
+    last = toks[:, -1:]
+    lg_ref = None
+    for i in range(3):
+        lg_ref, caches_ref = model.decode_step(params, last, caches_ref,
+                                               jnp.int32(8 + i))
+        last = jnp.argmax(lg_ref, -1)[:, None].astype(jnp.int32)
+
+    built = build_decode_step(cfg, mesh, ShapeConfig("d", "decode", 32, 2),
+                              steps_per_dispatch=3)
+    _, caches2 = model.prefill(params, toks, max_len=32)
+    lg_multi, _ = built.jit()(params, toks[:, -1:], caches2, jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(lg_multi, np.float32),
+                               np.asarray(lg_ref, np.float32),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_pad_heads_for_tp_properties():
+    import dataclasses
+    mesh = make_host_mesh()  # model axis = 1 -> no padding needed
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    assert pad_heads_for_tp(cfg, mesh) == cfg
+
+    # simulated 16-way model axis via a fake mesh-shape mapping
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((1, 16))
+    from repro.configs import get_config
+    p = pad_heads_for_tp(get_config("phi4_mini_3_8b"), FakeMesh())
+    assert p.n_heads == 32 and p.n_heads % 16 == 0 and p.n_heads % p.n_kv_heads == 0
+    a = pad_heads_for_tp(get_config("arctic_480b"), FakeMesh())
+    assert a.n_heads % 16 == 0 and a.n_heads % a.n_kv_heads == 0
+    g = pad_heads_for_tp(get_config("gemma_2b"), FakeMesh())
+    assert g.n_heads % 16 == 0 and g.n_heads % g.n_kv_heads == 0
+    c = pad_heads_for_tp(get_config("codeqwen15_7b"), FakeMesh())
+    assert c.n_heads == 32  # already divisible: unchanged
