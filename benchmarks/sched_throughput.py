@@ -1,0 +1,125 @@
+"""Control-plane throughput roofline: how fast is the scheduler *itself*?
+
+The paper's thesis is that scheduler latency bounds system efficiency; this
+benchmark turns that lens on our own engine. It sweeps (jobs x tasks/job x
+nodes x slots) regimes — including the many-short-jobs regime of Byun et al.
+2021 ("Node-Based Job Scheduling for Large Scale Simulations of Short Running
+Jobs") where the seed engine collapsed from ~54k tasks/s (one job array) to
+<1k tasks/s (2,000 concurrent jobs) — and measures *wall-clock* dispatch
+throughput of the virtual-time engine, i.e. pure control-plane work: queue
+fetch, allocation, accounting. Task durations are virtual, so tasks/s here is
+scheduler speed, not simulated cluster speed.
+
+Emits ``BENCH_sched_throughput.json`` at the repo root: per-regime
+{tasks/s, wall seconds} plus the peak regime. This file is the repo's perf
+trajectory anchor — regressions in control-plane scaling show up as a drop in
+the many-jobs rows long before they show up in the Table-9 grid.
+
+Usage:
+    python benchmarks/sched_throughput.py            # full sweep
+    python benchmarks/sched_throughput.py --quick    # CI smoke (seconds)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (  # noqa: E402
+    FAMILIES, Job, LatencyProfile, ResourceManager, Scheduler)
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_sched_throughput.json"
+
+# Virtual-cost profile: small but nonzero costs exercise the full latency
+# model (serial clock, queue-depth charge) without dominating virtual time.
+FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
+                      completion_cost=1e-5, startup_cost=1e-3,
+                      cycle_interval=1e-3)
+
+# (name, jobs, tasks/job, nodes, slots/node)
+REGIMES = (
+    ("single_array_8k", 1, 8192, 64, 1),        # the seed's happy path
+    ("jobs_500x4", 500, 4, 64, 1),
+    ("jobs_2000x4", 2000, 4, 64, 1),            # seed: ~879 tasks/s
+    ("jobs_8000x4", 8000, 4, 64, 1),            # seed: did not finish in min
+    ("slots_100k", 64, 2048, 1024, 100),        # >=100k-slot scale run
+    ("table9_rapid_slurm", 1, 240 * 1408, 1408, 1),  # paper grid anchor
+)
+QUICK = (
+    ("single_array_2k", 1, 2048, 64, 1),
+    ("jobs_500x4", 500, 4, 64, 1),
+    ("jobs_2000x4", 2000, 4, 64, 1),
+    ("slots_100k_smoke", 8, 512, 1024, 100),
+)
+
+
+def run_regime(name: str, jobs: int, tasks: int, nodes: int, slots: int,
+               profile: LatencyProfile = FAST, duration: float = 0.5) -> Dict:
+    prof = FAMILIES["slurm"] if name.startswith("table9") else profile
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots)
+    s = Scheduler(rm, profile=prof)
+    submitted: List[Job] = []
+    t0 = time.perf_counter()
+    for _ in range(jobs):
+        j = Job.array(tasks, duration=duration)
+        submitted.append(j)
+        s.submit(j)
+    s.run()
+    wall = time.perf_counter() - t0
+    total = jobs * tasks
+    assert s.completed == total, (name, s.completed, total)
+    return {
+        "name": name, "jobs": jobs, "tasks_per_job": tasks,
+        "nodes": nodes, "slots_per_node": slots, "total_tasks": total,
+        "wall_s": round(wall, 4),
+        "tasks_per_s": round(total / wall, 1),
+        "virtual_makespan_s": round(
+            max(st.last_end for st in s.stats.values()), 3),
+    }
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke runs")
+    ap.add_argument("--out", type=Path, default=OUT,
+                    help=f"output JSON path (default {OUT})")
+    args = ap.parse_args(argv)
+
+    regimes = QUICK if args.quick else REGIMES
+    rows = []
+    print("name,jobs,tasks_per_job,nodes,slots,tasks_per_s,wall_s")
+    for name, jobs, tasks, nodes, slots in regimes:
+        r = run_regime(name, jobs, tasks, nodes, slots)
+        rows.append(r)
+        print(f"{r['name']},{r['jobs']},{r['tasks_per_job']},{r['nodes']},"
+              f"{r['slots_per_node']},{r['tasks_per_s']},{r['wall_s']}")
+
+    peak = max(rows, key=lambda r: r["tasks_per_s"])
+    result = {
+        "bench": "sched_throughput",
+        "quick": bool(args.quick),
+        "profile": {"central_cost": FAST.central_cost,
+                    "queue_coeff": FAST.queue_coeff,
+                    "completion_cost": FAST.completion_cost,
+                    "cycle_interval": FAST.cycle_interval},
+        "regimes": rows,
+        "peak": {"name": peak["name"], "tasks_per_s": peak["tasks_per_s"]},
+        "seed_baseline": {"jobs_2000x4_tasks_per_s": 879.0,
+                          "note": "seed engine, same regime (ISSUE 1)"},
+    }
+    args.out.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"peak: {peak['name']} @ {peak['tasks_per_s']:.0f} tasks/s "
+          f"-> {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

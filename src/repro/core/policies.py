@@ -33,15 +33,24 @@ class Policy:
         return None
 
     @staticmethod
+    def _zero_slot_fit(task: Task, rm: ResourceManager) -> Optional[int]:
+        """Slot-free requests (license/memory-only) can land on fully-slot-
+        occupied nodes, which the free-capacity index excludes — fall back
+        to the full UP list for them."""
+        for n in rm.up_nodes():
+            if n.fits(task.request):
+                return n.node_id
+        return None
+
+    @staticmethod
     def _gang_assign(job: Job, rm: ResourceManager) -> Optional[List[Assignment]]:
         """All-or-nothing placement for a parallel job (trial allocation)."""
         picked: List[Assignment] = []
         try:
             for t in job.pending_tasks():
-                cands = rm.candidates(t.request)
-                if not cands:
+                node = rm.first_fit(t.request)
+                if node is None:
                     return None
-                node = cands[0]
                 rm.allocate(t, node.node_id)
                 picked.append((t, node.node_id))
             return picked
@@ -70,7 +79,7 @@ class FIFOPolicy(Policy):
                 continue
             blocked = False
             for t in job.pending_tasks():
-                node = self._first_fit(t, rm.up_nodes())
+                node = rm.first_fit(t.request)
                 if node is None:
                     blocked = True
                     break
@@ -92,10 +101,14 @@ class BackfillPolicy(Policy):
 
     def assign(self, jobs, rm, now):
         out: List[Assignment] = []
-        free = {n.node_id: n.free_slots for n in rm.up_nodes()}
-        nodes = {n.node_id: n for n in rm.up_nodes()}
+        # free-capacity index: only nodes with spare slots can host new work
+        pool = rm.free_nodes()
+        free = {n.node_id: n.free_slots for n in pool}
+        nodes = {n.node_id: n for n in pool}
 
         def try_fit(task: Task) -> Optional[int]:
+            if task.request.slots <= 0:
+                return Policy._zero_slot_fit(task, rm)
             for nid, slots in free.items():
                 if slots >= task.request.slots and nodes[nid].fits(task.request):
                     return nid
@@ -131,7 +144,7 @@ class BackfillPolicy(Policy):
                 if nid is None:
                     ok = False
                     break
-                free[nid] -= t.request.slots
+                free[nid] = free.get(nid, 0) - t.request.slots
                 for l in t.request.licenses:
                     lic[l] -= 1
                 placed.append((t, nid))
@@ -151,7 +164,7 @@ class BinPackingPolicy(Policy):
 
     def assign(self, jobs, rm, now):
         out: List[Assignment] = []
-        nodes = sorted(rm.up_nodes(), key=lambda n: n.free_slots)
+        nodes = sorted(rm.free_nodes(), key=lambda n: n.free_slots)
         free = {n.node_id: n.free_slots for n in nodes}
         lic = dict(rm.licenses)
         for job in jobs:
@@ -159,14 +172,17 @@ class BinPackingPolicy(Policy):
                 if any(lic.get(l, 0) <= 0 for l in t.request.licenses):
                     continue
                 best, best_left = None, None
-                for n in nodes:
-                    left = free[n.node_id] - t.request.slots
-                    if left >= 0 and n.fits(t.request):
-                        if best is None or left < best_left:
-                            best, best_left = n.node_id, left
+                if t.request.slots <= 0:
+                    best = self._zero_slot_fit(t, rm)
+                else:
+                    for n in nodes:
+                        left = free[n.node_id] - t.request.slots
+                        if left >= 0 and n.fits(t.request):
+                            if best is None or left < best_left:
+                                best, best_left = n.node_id, left
                 if best is None:
                     continue
-                free[best] -= t.request.slots
+                free[best] = free.get(best, 0) - t.request.slots
                 for l in t.request.licenses:
                     lic[l] -= 1
                 out.append((t, best))
@@ -191,17 +207,23 @@ class LocalityPolicy(Policy):
 
     def assign(self, jobs, rm, now):
         out: List[Assignment] = []
-        free = {n.node_id: n.free_slots for n in rm.up_nodes()}
-        nodes = {n.node_id: n for n in rm.up_nodes()}
+        pool = rm.free_nodes()
+        free = {n.node_id: n.free_slots for n in pool}
+        nodes = {n.node_id: n for n in pool}
         for job in jobs:
             hint = self.hints.get(job.job_id, LocalityHint())
             for t in job.pending_tasks():
-                cands = [nid for nid, s in free.items()
-                         if s >= t.request.slots and nodes[nid].fits(t.request)]
+                if t.request.slots <= 0:
+                    cands = [n.node_id for n in rm.up_nodes()
+                             if n.fits(t.request)]
+                else:
+                    cands = [nid for nid, s in free.items()
+                             if s >= t.request.slots
+                             and nodes[nid].fits(t.request)]
                 if not cands:
                     continue
                 nid = max(cands, key=lambda n: hint.scores.get(n, 0.0))
-                free[nid] -= t.request.slots
+                free[nid] = free.get(nid, 0) - t.request.slots
                 out.append((t, nid))
         return out
 

@@ -4,6 +4,13 @@ Tracks node availability/state from heartbeats, aggregates it for the
 scheduling function, and accounts static (slots, accelerators) and dynamic
 (memory, licenses, load) resources. Supports heterogeneous nodes via
 attribute constraints and administrator-defined resources.
+
+Aggregate queries are incremental: ``free_slots()``/``total_slots()`` are
+O(1) counters maintained at allocate/release/state-change time, ``up_nodes()``
+is a cached list invalidated only by membership changes (rare: failures,
+drains, rejoins), and a free-capacity index (`_free_ids`) lets
+``candidates()``/``first_fit()``/``free_nodes()`` consider only nodes with
+spare slots instead of rebuilding O(nodes) lists per scheduling cycle.
 """
 from __future__ import annotations
 
@@ -76,6 +83,32 @@ class ResourceManager:
         self.licenses: Dict[str, int] = {}
         self.heartbeat_timeout = heartbeat_timeout
         self._down_callbacks = []
+        # incremental aggregates over UP nodes
+        self._up_ids: Set[int] = set()
+        self._up_cache: Optional[List[Node]] = None
+        self._free_ids: Set[int] = set()   # UP nodes with free_slots > 0
+        self._free_cache: Optional[List[Node]] = None
+        self._free_slots = 0
+        self._total_slots = 0
+
+    # ---------------------------------------------------- aggregate upkeep
+    def _join_up(self, node: Node) -> None:
+        self._up_ids.add(node.node_id)
+        self._total_slots += node.slots
+        self._free_slots += node.free_slots
+        if node.free_slots > 0:
+            self._free_ids.add(node.node_id)
+        self._up_cache = None
+        self._free_cache = None
+
+    def _leave_up(self, node: Node) -> None:
+        """Drop a node from the UP aggregates (free counts as of *now*)."""
+        self._up_ids.discard(node.node_id)
+        self._free_ids.discard(node.node_id)
+        self._total_slots -= node.slots
+        self._free_slots -= node.free_slots
+        self._up_cache = None
+        self._free_cache = None
 
     # -------------------------------------------------------- topology
     def add_nodes(self, count: int, slots: int = 1, mem_mb: int = 1 << 20,
@@ -83,9 +116,10 @@ class ResourceManager:
         start = len(self.nodes)
         ids = []
         for i in range(start, start + count):
-            self.nodes[i] = Node(i, slots=slots, mem_mb=mem_mb,
-                                 accelerators=accelerators,
-                                 attrs=dict(attrs or {}))
+            node = Node(i, slots=slots, mem_mb=mem_mb,
+                        accelerators=accelerators, attrs=dict(attrs or {}))
+            self.nodes[i] = node
+            self._join_up(node)
             ids.append(i)
         return ids
 
@@ -99,6 +133,7 @@ class ResourceManager:
         node.load = load
         if node.state is NodeState.DOWN:
             node.state = NodeState.UP   # node rejoined (elastic growth)
+            self._join_up(node)
 
     def check_heartbeats(self, now: float) -> List[int]:
         """Mark nodes DOWN whose heartbeat lapsed; returns newly-down ids."""
@@ -107,6 +142,15 @@ class ResourceManager:
             if (node.state is NodeState.UP
                     and now - node.last_heartbeat > self.heartbeat_timeout):
                 node.state = NodeState.DOWN
+                self._leave_up(node)
+                # forget the node's workload (as mark_down does): its tasks
+                # are requeued with node_id=None, so nothing will ever
+                # release these slots — without the reset a later rejoin
+                # would restore the node with phantom tasks pinning capacity
+                node.running.clear()
+                node.free_slots = node.slots
+                node.free_mem = node.mem_mb
+                node.free_accel = node.accelerators
                 newly_down.append(node.node_id)
         for nid in newly_down:
             for cb in self._down_callbacks:
@@ -119,6 +163,8 @@ class ResourceManager:
     def mark_down(self, node_id: int) -> List[Tuple[int, int]]:
         """Fail a node; returns the task keys that were running on it."""
         node = self.nodes[node_id]
+        if node.state is NodeState.UP:
+            self._leave_up(node)
         node.state = NodeState.DOWN
         orphans = list(node.running)
         node.running.clear()
@@ -130,33 +176,72 @@ class ResourceManager:
         return orphans
 
     def drain(self, node_id: int) -> None:
-        self.nodes[node_id].state = NodeState.DRAINED
+        node = self.nodes[node_id]
+        if node.state is NodeState.UP:
+            self._leave_up(node)
+        node.state = NodeState.DRAINED
 
     # ------------------------------------------------------ allocation
     def allocate(self, task: Task, node_id: int) -> None:
         for lic in task.request.licenses:
             assert self.licenses.get(lic, 0) > 0, lic
             self.licenses[lic] -= 1
-        self.nodes[node_id].allocate(task)
+        node = self.nodes[node_id]
+        node.allocate(task)
         task.node_id = node_id
+        if node.state is NodeState.UP:
+            self._free_slots -= task.request.slots
+            if node.free_slots <= 0:
+                self._free_ids.discard(node_id)
+                self._free_cache = None
 
     def release(self, task: Task) -> None:
         for lic in task.request.licenses:
             self.licenses[lic] = self.licenses.get(lic, 0) + 1
         if task.node_id is not None and task.node_id in self.nodes:
-            self.nodes[task.node_id].release(task)
+            node = self.nodes[task.node_id]
+            held = task.key in node.running
+            node.release(task)
+            if held and node.state is NodeState.UP:
+                self._free_slots += task.request.slots
+                if node.free_slots > 0 and node.node_id not in self._free_ids:
+                    self._free_ids.add(node.node_id)
+                    self._free_cache = None
 
     # --------------------------------------------------------- queries
     def up_nodes(self) -> List[Node]:
-        return [n for n in self.nodes.values() if n.state is NodeState.UP]
+        if self._up_cache is None:
+            self._up_cache = [self.nodes[i] for i in sorted(self._up_ids)]
+        return self._up_cache
+
+    def free_nodes(self) -> List[Node]:
+        """UP nodes with spare slots, in node-id order (free-capacity index).
+
+        Cached between membership changes, like ``up_nodes()``.
+        """
+        if self._free_cache is None:
+            self._free_cache = [self.nodes[i] for i in sorted(self._free_ids)]
+        return self._free_cache
 
     def free_slots(self) -> int:
-        return sum(n.free_slots for n in self.up_nodes())
+        return self._free_slots
 
     def total_slots(self) -> int:
-        return sum(n.slots for n in self.up_nodes())
+        return self._total_slots
 
     def candidates(self, req: ResourceRequest) -> List[Node]:
         if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
             return []
+        if req.slots > 0:    # index only tracks nodes with spare slots
+            return [n for n in self.free_nodes() if n.fits(req)]
         return [n for n in self.up_nodes() if n.fits(req)]
+
+    def first_fit(self, req: ResourceRequest) -> Optional[Node]:
+        """First fitting node in node-id order, via the free-capacity index."""
+        if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
+            return None
+        pool = self.free_nodes() if req.slots > 0 else self.up_nodes()
+        for n in pool:
+            if n.fits(req):
+                return n
+        return None

@@ -13,6 +13,14 @@ pays ``startup_cost`` node-locally before its payload runs. These mechanisms
 generate the paper's Delta-T = t_s * n^alpha_s behaviour (families.py holds
 per-family calibrations; benchmarks fit t_s and alpha_s from runs).
 
+Hot-path accounting (control-plane scalability): the engine itself must not
+become the bottleneck it models.  The task fetch walks the QueueManager's
+dispatch-order heap (amortized O(1)); the queue depth the latency model
+charges is an incrementally-maintained counter (updated on submit / cursor
+advance / requeue / job finish) instead of an O(active-jobs) rescan per
+dispatch; running tasks are indexed so straggler detection and node-failure
+recovery scan only what is actually running.
+
 The engine is used three ways:
   * virtual-time simulation (paper benchmark, scale experiments);
   * real-time with an Executor running Python/JAX payloads;
@@ -29,7 +37,7 @@ from repro.core.families import INPROC, LatencyProfile
 from repro.core.job import Job, JobState, JobStats, Task, TaskState
 from repro.core.policies import FIFOPolicy, Policy
 from repro.core.queues import QueueManager
-from repro.core.resources import ResourceManager
+from repro.core.resources import NodeState, ResourceManager
 from repro.core.simulator import EventLoop
 
 
@@ -40,6 +48,31 @@ class SchedulerConfig:
     preemption: bool = False
     heartbeat_interval: float = 0.0    # 0 = disabled (sim drives failures)
     max_dispatch_per_cycle: int = 0    # 0 = unlimited
+
+
+def _unit_request(r) -> bool:
+    return not (r.slots != 1 or r.node_attrs or r.licenses
+                or r.mem_mb or r.accelerators)
+
+
+def _is_unit(job: Job) -> bool:
+    """Eligible for the unit-slot fast path (one slot, no constraints).
+
+    Checks every task, not just the first: a heterogeneous job must take the
+    policy path. Job.array shares one request object across tasks, so the
+    common case is O(n) identity comparisons, one real check.
+    """
+    if job.parallel:
+        return False
+    if not job.tasks:
+        return True
+    first = job.tasks[0].request
+    if not _unit_request(first):
+        return False
+    for t in job.tasks:
+        if t.request is not first and not _unit_request(t.request):
+            return False
+    return True
 
 
 class Scheduler:
@@ -67,6 +100,11 @@ class Scheduler:
         self._active_jobs: Dict[int, Job] = {}
         self._clones: Dict[Tuple[int, int], Task] = {}
         self._durations: Deque[float] = collections.deque(maxlen=512)
+        # incremental hot-path accounting
+        self._depth = 0                  # == seed's recomputed _queue_depth()
+        self._nonunit = 0                # active jobs ineligible for fast path
+        self._unit: Dict[int, bool] = {}
+        self._running_tasks: Dict[Tuple[int, int], Task] = {}
         self.rm.on_node_down(self._node_down)
 
     # ----------------------------------------------------------- submit
@@ -76,6 +114,12 @@ class Scheduler:
         self.qm.submit(job, now)
         self._active_jobs[job.job_id] = job
         self._cursor[job.job_id] = 0
+        unit = _is_unit(job)
+        self._unit[job.job_id] = unit
+        if not unit:
+            self._nonunit += 1
+        if job.state is not JobState.PENDING:     # eligible now -> counted
+            self._depth += job.n_tasks
         self.stats[job.job_id] = JobStats(
             job_id=job.job_id, submit_time=now, n_tasks=job.n_tasks)
         self._request_cycle()
@@ -107,60 +151,70 @@ class Scheduler:
             self._cycle()
 
     def _all_unit(self) -> bool:
-        for job in self._active_jobs.values():
-            if job.parallel:
-                return False
-            for t in job.tasks[:1]:
-                r = t.request
-                if (r.slots != 1 or r.node_attrs or r.licenses
-                        or r.mem_mb or r.accelerators):
-                    return False
-        return True
+        return self._nonunit == 0
 
     def _rebuild_free_stack(self) -> None:
         self._free_stack = []
-        for n in self.rm.up_nodes():
+        for n in self.rm.free_nodes():
             self._free_stack.extend([n.node_id] * n.free_slots)
+
+    def _pop_free_node(self) -> Optional[int]:
+        """Pop a validated unit-slot node, discarding stale stack entries."""
+        while self._free_stack:
+            nid = self._free_stack.pop()
+            node = self.rm.nodes[nid]
+            if node.state is NodeState.UP and node.free_slots > 0:
+                return nid
+        return None
 
     def _next_waiting(self) -> Optional[Task]:
         while self._requeue:
             t = self._requeue.popleft()
+            self._depth -= 1
             if t.state in (TaskState.WAITING, TaskState.PREEMPTED):
                 return t
-        now = self.loop.now
-        for job in self.qm.queued_jobs(now):
+        while True:
+            job = self.qm.next_eligible()
+            if job is None:
+                return None
             cur = self._cursor.get(job.job_id, 0)
-            while cur < job.n_tasks:
+            n = job.n_tasks
+            found: Optional[Task] = None
+            while cur < n:
                 t = job.tasks[cur]
                 cur += 1
+                self._depth -= 1
                 if t.state is TaskState.WAITING:
-                    self._cursor[job.job_id] = cur
-                    return t
+                    found = t
+                    break
             self._cursor[job.job_id] = cur
-        return None
+            if found is not None:
+                return found
+            self.qm.mark_exhausted(job.job_id)   # requeues bypass this path
 
     def _queue_depth(self) -> int:
-        d = len(self._requeue)
-        for job in self._active_jobs.values():
-            if job.state in (JobState.QUEUED, JobState.RUNNING):
-                d += job.n_tasks - self._cursor.get(job.job_id, 0)
-        return d
+        return self._depth
 
     def _cycle_fast(self) -> None:
         if not self._free_stack:
             self._rebuild_free_stack()
-        depth = self._queue_depth()
         limit = self.config.max_dispatch_per_cycle or float("inf")
         count = 0
         while self._free_stack and count < limit:
+            # validate the node *before* consuming a task so a stale stack
+            # entry (node since drained/failed/filled) never drops a task
+            nid = self._free_stack[-1]
+            node = self.rm.nodes[nid]
+            if node.state is not NodeState.UP or node.free_slots <= 0:
+                self._free_stack.pop()
+                continue
             task = self._next_waiting()
             if task is None:
                 break
-            nid = self._free_stack.pop()
-            if self.rm.nodes[nid].free_slots <= 0:
-                continue
-            self._dispatch(task, nid, depth)
-            depth -= 1
+            self._free_stack.pop()
+            # fetching the task already decremented _depth; the latency model
+            # charges the depth *including* the task being dispatched
+            self._dispatch(task, nid, self._depth + 1)
             count += 1
 
     def _cycle_policy(self) -> None:
@@ -196,6 +250,7 @@ class Scheduler:
         start = self.sched_clock + self.profile.startup_cost
         task.start_time = start
         task.state = TaskState.RUNNING
+        self._running_tasks[task.key] = task
         if self.executor is not None and task.payload is not None:
             self.loop.at(start, self._run_payload, task)
         else:
@@ -211,9 +266,9 @@ class Scheduler:
         now = self.loop.now
         task.end_time = now
         task.state = TaskState.COMPLETED if ok else TaskState.FAILED
+        self._running_tasks.pop(task.key, None)
         self.rm.release(task)
-        if self._free_stack is not None and task.request.slots == 1 \
-                and task.node_id is not None:
+        if self._fast and task.request.slots == 1 and task.node_id is not None:
             self._free_stack.append(task.node_id)
         self.sched_clock = max(self.sched_clock, now) + self.profile.completion_cost
         self.completed += 1
@@ -240,65 +295,107 @@ class Scheduler:
             if task.attempts <= job.max_restarts:
                 task.state = TaskState.WAITING
                 self._requeue.append(task)
+                self._depth += 1
             else:
                 job.failed_tasks += 1
         st = self.stats[job.job_id]
         st.last_end = max(st.last_end, now)
         if job.done:
             state = JobState.COMPLETED if job.failed_tasks == 0 else JobState.FAILED
-            for q in self.qm.queues.values():
-                q.remove(job)
-            self.qm.job_finished(job, state, now)
-            del self._active_jobs[job.job_id]
+            self._retire(job, state, now)
         self._request_cycle()
+
+    def _retire(self, job: Job, state: JobState, now: float) -> None:
+        """Terminal bookkeeping: depth, fast-path counters, dependents."""
+        if job.state in (JobState.QUEUED, JobState.RUNNING):
+            self._depth -= job.n_tasks - self._cursor.get(job.job_id, 0)
+        released = self.qm.job_finished(job, state, now)
+        for dep in released:
+            self._depth += dep.n_tasks - self._cursor.get(dep.job_id, 0)
+        if not self._unit.pop(job.job_id, True):
+            self._nonunit -= 1
+        del self._active_jobs[job.job_id]
 
     def _cancel(self, task: Task) -> None:
         if task.state is TaskState.RUNNING:
+            self._running_tasks.pop(task.key, None)
             self.rm.release(task)
-            if task.request.slots == 1 and task.node_id is not None:
+            if self._fast and task.request.slots == 1 \
+                    and task.node_id is not None:
                 self._free_stack.append(task.node_id)
         task.state = TaskState.CANCELLED
 
     # --------------------------------------------- fault tolerance paths
     def _node_down(self, node_id: int) -> None:
-        """Requeue orphaned tasks of a failed node (job restarting §3.2.7)."""
+        """Requeue orphaned tasks of a failed node (job restarting §3.2.7).
+
+        Scans the running-task index, not every task of every job.
+        """
         self._free_stack = [n for n in self._free_stack if n != node_id]
-        for job in list(self._active_jobs.values()):
-            for t in job.tasks:
-                if t.node_id == node_id and t.state is TaskState.RUNNING:
-                    t.state = TaskState.WAITING
-                    t.node_id = None
-                    if t.attempts <= job.max_restarts:
-                        self._requeue.append(t)
-                    else:
-                        t.state = TaskState.FAILED
-                        job.failed_tasks += 1
+        touched: List[Job] = []
+        for t in list(self._running_tasks.values()):
+            if t.node_id != node_id:
+                continue
+            job = self._active_jobs.get(t.job_id)
+            if job is None:
+                continue
+            self._running_tasks.pop(t.key, None)
+            # return consumables: the node's slot bookkeeping was reset when
+            # it went down, but licenses are cluster-global and would leak
+            # (release is a no-op on the node side: task.key was cleared
+            # from node.running)
+            self.rm.release(t)
+            t.state = TaskState.WAITING
+            t.node_id = None
+            if t.attempts <= job.max_restarts:
+                self._requeue.append(t)
+                self._depth += 1
+            else:
+                t.state = TaskState.FAILED
+                job.failed_tasks += 1
+                touched.append(job)
+        now = self.loop.now
+        for job in touched:
+            # the failed task may have been the job's last outstanding one
+            if job.job_id in self._active_jobs and job.done:
+                self._retire(job, JobState.FAILED, now)
         self._request_cycle()
 
     def fail_node(self, node_id: int) -> None:
         self.rm.mark_down(node_id)
 
     def _speculate(self) -> None:
-        """Straggler mitigation: clone tasks running far beyond the median."""
+        """Straggler mitigation: clone tasks running far beyond the median.
+
+        Walks the running-task index (bounded by occupied slots) instead of
+        every task of every active job.
+        """
         if len(self._durations) < 8 or not self._free_stack:
             return
         med = statistics.median(self._durations)
         thresh = self.config.speculative_factor * med
         now = self.loop.now
-        for job in self._active_jobs.values():
-            for t in job.tasks:
-                if (t.state is TaskState.RUNNING and t.speculative_of is None
-                        and t.key not in self._clones
-                        and now - t.start_time > thresh and self._free_stack):
-                    clone = Task(job_id=t.job_id, index=len(job.tasks),
-                                 duration=t.duration, payload=t.payload,
-                                 request=t.request, speculative_of=t.index)
-                    job.tasks.append(clone)
-                    job.n_clones += 1
-                    self._clones[t.key] = clone
-                    nid = self._free_stack.pop()
-                    if self.rm.nodes[nid].free_slots > 0:
-                        self._dispatch(clone, nid, self._queue_depth())
+        for t in list(self._running_tasks.values()):
+            if not self._free_stack:
+                break
+            if (t.state is TaskState.RUNNING and t.speculative_of is None
+                    and t.key not in self._clones
+                    and now - t.start_time > thresh):
+                job = self._active_jobs.get(t.job_id)
+                if job is None:
+                    continue
+                nid = self._pop_free_node()
+                if nid is None:
+                    break       # only stale stack entries left
+                clone = Task(job_id=t.job_id, index=len(job.tasks),
+                             duration=t.duration, payload=t.payload,
+                             request=t.request, speculative_of=t.index)
+                job.tasks.append(clone)
+                job.n_clones += 1
+                if job.state in (JobState.QUEUED, JobState.RUNNING):
+                    self._depth += 1     # clone extends the job's task span
+                self._clones[t.key] = clone
+                self._dispatch(clone, nid, self._queue_depth())
 
     def _try_preempt(self, job: Job) -> List[Tuple[Task, int]]:
         """Preempt lowest-priority running tasks to fit `job` (§3.2.7)."""
@@ -313,10 +410,12 @@ class Scheduler:
                 if t.state is TaskState.RUNNING:
                     remaining = max(t.duration - (self.loop.now - t.start_time), 0.0)
                     t.duration = remaining      # hibernate: resume remainder
+                    self._running_tasks.pop(t.key, None)
                     self.rm.release(t)
                     t.state = TaskState.PREEMPTED
                     t.node_id = None
                     self._requeue.append(t)
+                    self._depth += 1
                     freed += t.request.slots
                 if freed >= need:
                     break

@@ -16,17 +16,18 @@ finished request frees its lane immediately for the next admission.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.job import Job, ResourceRequest
+from repro.core.job import Job, ResourceRequest, Task
 from repro.core.resources import ResourceManager
 from repro.models import build_model
 from repro.models.transformer import init_caches
@@ -67,10 +68,11 @@ class ServingEngine:
         self.positions = np.zeros((lanes,), np.int32)   # next write index
         self.lane_req: List[Optional[ServeRequest]] = [None] * lanes
         self.active_mask = np.zeros((lanes,), bool)
-        self.pending: List[ServeRequest] = []
+        self.pending: Deque[ServeRequest] = collections.deque()
         # admission control via the core scheduler's resource manager
         self.rm = ResourceManager()
         self.rm.add_nodes(lanes, slots=1)
+        self._lane_jobs: Dict[int, Task] = {}   # lane -> admitted task
         self._decode = jax.jit(
             self._decode_fn, donate_argnums=(1,) if donate else ())
         self._prefill_one = jax.jit(self._prefill_fn)
@@ -86,7 +88,7 @@ class ServingEngine:
 
     def _prefill_fn(self, params, tokens):
         """Prefill one request padded to max_len-sized lane cache."""
-        last, caches = self.model.prefill(self.params, tokens,
+        last, caches = self.model.prefill(params, tokens,
                                           max_len=self.max_len)
         next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         return next_tok, caches
@@ -102,10 +104,9 @@ class ServingEngine:
             if not free:
                 return
             lane = free[0]
-            req = self.pending.pop(0)
+            req = self.pending.popleft()
             task_job = Job.array(1, name=f"req{req.request_id}")
             self.rm.allocate(task_job.tasks[0], lane)
-            self._lane_jobs = getattr(self, "_lane_jobs", {})
             self._lane_jobs[lane] = task_job.tasks[0]
             # prefill into this lane
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]

@@ -3,7 +3,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, don't crash
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     EventLoop, FAMILIES, Job, JobState, LatencyProfile, ResourceManager,
