@@ -33,15 +33,19 @@ CACHE = Path(__file__).resolve().parent.parent / "experiments" / "bench_cache.js
 
 
 def run_taskset(family: str, n: int, t: float, multilevel: bool = False,
-                seed: int = 0) -> Dict:
-    """One Table-9 run; returns T_total, Delta-T and utilization."""
+                seed: int = 0, processors: int = P) -> Dict:
+    """One Table-9 run; returns T_total, Delta-T and utilization.
+
+    ``processors`` scales the paper's grid beyond its P=1408 (the 100k-slot
+    runs fit (t_s, alpha_s) at P >= 100,000).
+    """
     prof = FAMILIES[family]
     rm = ResourceManager()
-    rm.add_nodes(P, slots=1)
+    rm.add_nodes(processors, slots=1)
     s = Scheduler(rm, profile=prof)
-    job = Job.array(n * P, duration=t, name=f"{family}-{n}-{t}")
+    job = Job.array(n * processors, duration=t, name=f"{family}-{n}-{t}")
     if multilevel:
-        job = aggregate(job, slots=P, cfg=MultilevelConfig(mode="mimo"))
+        job = aggregate(job, slots=processors, cfg=MultilevelConfig(mode="mimo"))
     s.submit(job)
     s.run()
     st = s.stats[job.job_id]
@@ -49,6 +53,7 @@ def run_taskset(family: str, n: int, t: float, multilevel: bool = False,
     T_job = t * n               # isolated per-processor work (original tasks)
     return {
         "family": family, "n": n, "t": t, "multilevel": multilevel,
+        "P": processors,
         "T_total": T_total, "T_job": T_job, "delta_t": T_total - T_job,
         "utilization": T_job / T_total,
     }

@@ -10,28 +10,39 @@ throughput of the virtual-time engine, i.e. pure control-plane work: queue
 fetch, allocation, accounting. Task durations are virtual, so tasks/s here is
 scheduler speed, not simulated cluster speed.
 
+Two regime suites:
+
+* ``fifo`` — the PR-1 hot path (unit-slot job arrays, O(1)/dispatch);
+* ``policy_path`` — backfill / bin-packing / locality on the capacity-
+  bucketed node index (PR 2), including a heterogeneous 102,400-slot run
+  with mixed node sizes and mixed request sizes.
+
 Emits ``BENCH_sched_throughput.json`` at the repo root: per-regime
 {tasks/s, wall seconds} plus the peak regime. This file is the repo's perf
 trajectory anchor — regressions in control-plane scaling show up as a drop in
 the many-jobs rows long before they show up in the Table-9 grid.
 
 Usage:
-    python benchmarks/sched_throughput.py            # full sweep
-    python benchmarks/sched_throughput.py --quick    # CI smoke (seconds)
+    python benchmarks/sched_throughput.py                        # full sweep
+    python benchmarks/sched_throughput.py --quick                # CI smoke
+    python benchmarks/sched_throughput.py --suite policy_path    # one suite
 """
 from __future__ import annotations
 
 import argparse
 import json
+import random
 import sys
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import (  # noqa: E402
-    FAMILIES, Job, LatencyProfile, ResourceManager, Scheduler)
+    FAMILIES, Job, LatencyProfile, ResourceManager, ResourceRequest,
+    Scheduler)
+from repro.core.policies import LocalityPolicy, make_policy  # noqa: E402
 
 ROOT = Path(__file__).resolve().parent.parent
 OUT = ROOT / "BENCH_sched_throughput.json"
@@ -42,33 +53,75 @@ FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
                       completion_cost=1e-5, startup_cost=1e-3,
                       cycle_interval=1e-3)
 
-# (name, jobs, tasks/job, nodes, slots/node)
-REGIMES = (
-    ("single_array_8k", 1, 8192, 64, 1),        # the seed's happy path
-    ("jobs_500x4", 500, 4, 64, 1),
-    ("jobs_2000x4", 2000, 4, 64, 1),            # seed: ~879 tasks/s
-    ("jobs_8000x4", 8000, 4, 64, 1),            # seed: did not finish in min
-    ("slots_100k", 64, 2048, 1024, 100),        # >=100k-slot scale run
-    ("table9_rapid_slurm", 1, 240 * 1408, 1408, 1),  # paper grid anchor
+# heterogeneous 102,400-slot cluster: (count, slots/node) groups
+HETERO_NODES = ((512, 50), (256, 100), (256, 200))
+
+# (name, jobs, tasks/job, node groups, policy, heterogeneous requests)
+Regime = Tuple[str, int, int, Sequence[Tuple[int, int]], Optional[str], bool]
+
+FIFO_REGIMES: Tuple[Regime, ...] = (
+    ("single_array_8k", 1, 8192, ((64, 1),), None, False),
+    ("jobs_500x4", 500, 4, ((64, 1),), None, False),
+    ("jobs_2000x4", 2000, 4, ((64, 1),), None, False),
+    ("jobs_8000x4", 8000, 4, ((64, 1),), None, False),
+    ("slots_100k", 64, 2048, ((1024, 100),), None, False),
+    ("table9_rapid_slurm", 1, 240 * 1408, ((1408, 1),), None, False),
 )
-QUICK = (
-    ("single_array_2k", 1, 2048, 64, 1),
-    ("jobs_500x4", 500, 4, 64, 1),
-    ("jobs_2000x4", 2000, 4, 64, 1),
-    ("slots_100k_smoke", 8, 512, 1024, 100),
+POLICY_REGIMES: Tuple[Regime, ...] = (
+    ("backfill_2000x4", 2000, 4, ((64, 1),), "backfill", False),
+    ("binpack_2000x4", 2000, 4, ((64, 1),), "binpack", False),
+    ("locality_2000x4", 2000, 4, ((64, 1),), "locality", False),
+    ("backfill_hetero_102k", 64, 512, HETERO_NODES, "backfill", True),
+    ("binpack_hetero_102k", 64, 512, HETERO_NODES, "binpack", True),
+)
+QUICK_FIFO: Tuple[Regime, ...] = (
+    ("single_array_2k", 1, 2048, ((64, 1),), None, False),
+    ("jobs_500x4", 500, 4, ((64, 1),), None, False),
+    ("jobs_2000x4", 2000, 4, ((64, 1),), None, False),
+    ("slots_100k_smoke", 8, 512, ((1024, 100),), None, False),
+)
+QUICK_POLICY: Tuple[Regime, ...] = (
+    ("backfill_500x4", 500, 4, ((64, 1),), "backfill", False),
+    ("binpack_500x4", 500, 4, ((64, 1),), "binpack", False),
+    ("locality_500x4", 500, 4, ((64, 1),), "locality", False),
+    ("binpack_hetero_smoke", 16, 128, HETERO_NODES, "binpack", True),
 )
 
+# recorded baselines for the perf trajectory (ISSUE 1 / ISSUE 2 notes)
+BASELINES = {
+    "seed": {"jobs_2000x4_tasks_per_s": 879.0,
+             "note": "seed engine, same regime (ISSUE 1)"},
+    "pre_pr2_policy_path": {
+        "backfill_2000x4_tasks_per_s": 1208.0,
+        "binpack_2000x4_tasks_per_s": 725.4,
+        "locality_2000x4_tasks_per_s": 797.8,
+        "binpack_hetero_102k_tasks_per_s": 1481.6,
+        "note": "PR-1 engine + per-cycle-scan policies, same regimes "
+                "(measured before the capacity-index rewrite, ISSUE 2)"},
+}
 
-def run_regime(name: str, jobs: int, tasks: int, nodes: int, slots: int,
+
+def run_regime(name: str, jobs: int, tasks: int,
+               node_groups: Sequence[Tuple[int, int]],
+               policy_name: Optional[str], hetero_req: bool,
                profile: LatencyProfile = FAST, duration: float = 0.5) -> Dict:
     prof = FAMILIES["slurm"] if name.startswith("table9") else profile
+    rng = random.Random(7)
     rm = ResourceManager()
-    rm.add_nodes(nodes, slots=slots)
-    s = Scheduler(rm, profile=prof)
+    for count, slots in node_groups:
+        rm.add_nodes(count, slots=slots)
+    policy = None
+    if policy_name == "locality":
+        policy = LocalityPolicy()
+    elif policy_name is not None:
+        policy = make_policy(policy_name)
+    s = Scheduler(rm, policy=policy, profile=prof)
     submitted: List[Job] = []
     t0 = time.perf_counter()
     for _ in range(jobs):
-        j = Job.array(tasks, duration=duration)
+        req = (ResourceRequest(slots=rng.choice((1, 2, 4)))
+               if hetero_req else None)
+        j = Job.array(tasks, duration=duration, request=req)
         submitted.append(j)
         s.submit(j)
     s.run()
@@ -77,7 +130,10 @@ def run_regime(name: str, jobs: int, tasks: int, nodes: int, slots: int,
     assert s.completed == total, (name, s.completed, total)
     return {
         "name": name, "jobs": jobs, "tasks_per_job": tasks,
-        "nodes": nodes, "slots_per_node": slots, "total_tasks": total,
+        "nodes": sum(c for c, _ in node_groups),
+        "slots_total": sum(c * sl for c, sl in node_groups),
+        "policy": policy_name or "fifo",
+        "total_tasks": total,
         "wall_s": round(wall, 4),
         "tasks_per_s": round(total / wall, 1),
         "virtual_makespan_s": round(
@@ -89,31 +145,45 @@ def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for CI smoke runs")
-    ap.add_argument("--out", type=Path, default=OUT,
-                    help=f"output JSON path (default {OUT})")
+    ap.add_argument("--suite", choices=("all", "fifo", "policy_path"),
+                    default="all", help="which regime suite to run")
+    ap.add_argument("--out", type=Path, default=None,
+                    help=f"output JSON path (default {OUT} for the full "
+                         "sweep; partial/quick runs go to experiments/ so "
+                         "they cannot clobber the committed anchor)")
     args = ap.parse_args(argv)
+    if args.out is None:
+        if args.quick or args.suite != "all":
+            args.out = ROOT / "experiments" / "bench_sched_partial.json"
+            args.out.parent.mkdir(parents=True, exist_ok=True)
+        else:
+            args.out = OUT
 
-    regimes = QUICK if args.quick else REGIMES
+    fifo = QUICK_FIFO if args.quick else FIFO_REGIMES
+    policy = QUICK_POLICY if args.quick else POLICY_REGIMES
+    regimes = {"all": fifo + policy, "fifo": fifo,
+               "policy_path": policy}[args.suite]
     rows = []
-    print("name,jobs,tasks_per_job,nodes,slots,tasks_per_s,wall_s")
-    for name, jobs, tasks, nodes, slots in regimes:
-        r = run_regime(name, jobs, tasks, nodes, slots)
+    print("name,policy,jobs,tasks_per_job,nodes,slots_total,tasks_per_s,wall_s")
+    for regime in regimes:
+        r = run_regime(*regime)
         rows.append(r)
-        print(f"{r['name']},{r['jobs']},{r['tasks_per_job']},{r['nodes']},"
-              f"{r['slots_per_node']},{r['tasks_per_s']},{r['wall_s']}")
+        print(f"{r['name']},{r['policy']},{r['jobs']},{r['tasks_per_job']},"
+              f"{r['nodes']},{r['slots_total']},{r['tasks_per_s']},"
+              f"{r['wall_s']}")
 
     peak = max(rows, key=lambda r: r["tasks_per_s"])
     result = {
         "bench": "sched_throughput",
         "quick": bool(args.quick),
+        "suite": args.suite,
         "profile": {"central_cost": FAST.central_cost,
                     "queue_coeff": FAST.queue_coeff,
                     "completion_cost": FAST.completion_cost,
                     "cycle_interval": FAST.cycle_interval},
         "regimes": rows,
         "peak": {"name": peak["name"], "tasks_per_s": peak["tasks_per_s"]},
-        "seed_baseline": {"jobs_2000x4_tasks_per_s": 879.0,
-                          "note": "seed engine, same regime (ISSUE 1)"},
+        "baselines": BASELINES,
     }
     args.out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"peak: {peak['name']} @ {peak['tasks_per_s']:.0f} tasks/s "

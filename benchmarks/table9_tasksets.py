@@ -1,6 +1,21 @@
 """Paper Table 9: runtimes of the four constant-time task sets on the four
-schedulers (1408 cores, 3 trials)."""
-from benchmarks.common import TASK_SETS, all_results
+schedulers (1408 cores, 3 trials) — plus a scaled grid toward P >= 100k.
+
+Default invocation reproduces the paper's grid exactly (cached in
+experiments/bench_cache.json).  ``--P`` runs a scaled grid at an arbitrary
+processor count and refits the latency model (Delta-T = t_s * n^alpha_s)
+with ``latency_model.fit_power_law``:
+
+    python benchmarks/table9_tasksets.py                     # paper grid
+    python benchmarks/table9_tasksets.py --P 102400 --fit    # 100k-slot grid
+"""
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import TASK_SETS, all_results, run_taskset
+
+EXPERIMENTS = Path(__file__).resolve().parent.parent / "experiments"
 
 
 def run(quiet: bool = False):
@@ -15,5 +30,49 @@ def run(quiet: bool = False):
     return rows
 
 
+def run_scaled(processors: int, family: str = "slurm",
+               n_values=(1, 2, 4, 8), t: float = 1.0, fit: bool = True):
+    """The Table-9 protocol at P processors: one constant-time set per n,
+    then a power-law refit of (t_s, alpha_s) from the measured Delta-T."""
+    from repro.core.latency_model import fit_power_law
+
+    print(f"# Table 9 scaled grid: P={processors}, family={family}, t={t}s")
+    print("scheduler,P,t,n,T_total_s,delta_t_s,utilization")
+    rows = []
+    for n in n_values:
+        r = run_taskset(family, n, t, processors=processors)
+        print(f"{family},{processors},{t},{n},{r['T_total']:.1f},"
+              f"{r['delta_t']:.2f},{r['utilization']:.4f}")
+        rows.append(r)
+    out = {"bench": "table9_scaled", "P": processors, "family": family,
+           "t": t, "rows": rows}
+    if fit:
+        model = fit_power_law([r["n"] for r in rows],
+                              [r["delta_t"] for r in rows])
+        print(f"fit: {model}")
+        out["fit"] = {"t_s": model.t_s, "alpha_s": model.alpha_s,
+                      "r2": model.r2}
+    EXPERIMENTS.mkdir(parents=True, exist_ok=True)
+    path = EXPERIMENTS / f"table9_scale_P{processors}.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"-> {path}")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--P", type=int, default=None,
+                    help="run the scaled grid at this processor count "
+                         "(default: the paper's P=1408 full grid)")
+    ap.add_argument("--family", default="slurm",
+                    help="scheduler family for the scaled grid")
+    ap.add_argument("--n-values", type=int, nargs="+", default=(1, 2, 4, 8),
+                    help="tasks/processor points for the scaled grid")
+    ap.add_argument("--no-fit", dest="fit", action="store_false",
+                    help="skip the (t_s, alpha_s) refit of the scaled runs")
+    args = ap.parse_args()
+    if args.P:
+        run_scaled(args.P, family=args.family, n_values=tuple(args.n_values),
+                   fit=args.fit)
+    else:
+        run()

@@ -24,6 +24,7 @@ against it.
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 import math
@@ -186,6 +187,11 @@ class QueueManager:
         self._exhausted: Set[int] = set()    # ids with no unfetched tasks
         self._waiting_on: Dict[int, Set[int]] = {}   # pending -> unmet deps
         self._dependents: Dict[int, List[Job]] = {}  # dep -> pending waiters
+        # dispatch-order snapshot for the policy path: sorted-insert on
+        # enqueue, lazy-deletion on dequeue, built on first use so pure
+        # fast-path (FIFO) runs never pay for it
+        self._ordered: Optional[List[Tuple[Tuple[float, float, int], Job]]] = None
+        self._ordered_dead = 0
 
     def add_queue(self, config: QueueConfig) -> None:
         self.queues[config.name] = JobQueue(config)
@@ -211,6 +217,9 @@ class QueueManager:
         self._queued.add(job.job_id)
         heapq.heappush(self._order_heap,
                        (_global_key(job), next(self._seq), job))
+        if self._ordered is not None:
+            # keys are total (job_id breaks ties), so Job never compares
+            bisect.insort(self._ordered, (_global_key(job), job))
 
     def _deps_met(self, job: Job) -> bool:
         return all(self._finished.get(d) == JobState.COMPLETED
@@ -225,6 +234,8 @@ class QueueManager:
         q = self.queues.get(job.queue)
         if q is not None:
             q.remove(job)
+        if was_queued and self._ordered is not None:
+            self._ordered_dead += 1      # entry dies lazily
         return was_queued
 
     def job_finished(self, job: Job, state: JobState, now: float) -> List[Job]:
@@ -276,17 +287,36 @@ class QueueManager:
     def mark_exhausted(self, job_id: int) -> None:
         self._exhausted.add(job_id)
 
+    def _refresh_ordered(self) -> None:
+        """Build the snapshot on first use; compact once dead entries
+        outnumber live ones, keeping walks linear in *live* jobs."""
+        if self._ordered is None:
+            self._ordered = sorted(
+                (_global_key(j), j) for q in self.queues.values()
+                for j in q._members.values())
+            self._ordered_dead = 0
+        elif self._ordered_dead * 2 > len(self._ordered):
+            self._ordered = [e for e in self._ordered
+                             if e[1].job_id in self._queued]
+            self._ordered_dead = 0
+
     def queued_jobs(self, now: float) -> List[Job]:
         """All eligible jobs across queues in dispatch order (seed-exact).
 
-        O(J log J) snapshot — used by the policy path (once per cycle) and as
-        the golden reference for ``next_eligible``.
+        Served from the incrementally-sorted snapshot: O(live + dead) per
+        call instead of the seed's O(J log J) re-sort.
         """
-        out: List[Job] = []
-        for q in self.queues.values():
-            out.extend(q._members.values())
-        out.sort(key=_global_key)
-        return out
+        return list(self.iter_queued(now))
+
+    def iter_queued(self, now: float):
+        """Lazy ``queued_jobs``: yields in dispatch order, so early-exiting
+        consumers (the policy cycle once capacity is exhausted) pay only
+        for the prefix they actually look at."""
+        self._refresh_ordered()
+        queued = self._queued
+        for _, j in self._ordered:
+            if j.job_id in queued:
+                yield j
 
     def depth(self) -> int:
         return sum(len(q) for q in self.queues.values())

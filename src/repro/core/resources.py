@@ -9,16 +9,151 @@ Aggregate queries are incremental: ``free_slots()``/``total_slots()`` are
 O(1) counters maintained at allocate/release/state-change time, ``up_nodes()``
 is a cached list invalidated only by membership changes (rare: failures,
 drains, rejoins), and a free-capacity index (`_free_ids`) lets
-``candidates()``/``first_fit()``/``free_nodes()`` consider only nodes with
-spare slots instead of rebuilding O(nodes) lists per scheduling cycle.
+``candidates()``/``free_nodes()`` consider only nodes with spare slots
+instead of rebuilding O(nodes) lists per scheduling cycle.
+
+The capacity-bucketed node index (``CapacityIndex``) goes further: it keeps
+a dense free-slot mirror, a max segment tree over node ids (leftmost
+node-with-``free >= s`` in O(log nodes) — the first-fit query every policy
+and ``_gang_assign`` trial allocation needs), and per-capacity buckets
+backed by lazy-deletion min-id heaps (the best-fit query bin-packing
+needs).  It is updated incrementally on allocate/release/heartbeat-lapse/
+node-failure/drain/rejoin, so no scheduling cycle ever rebuilds an
+O(nodes) free map (Byun et al. 2021's node-indexed placement).
 """
 from __future__ import annotations
 
 import enum
+import heapq
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.core.job import ResourceRequest, Task
+
+
+class CapacityIndex:
+    """Free-slot index over node ids: segment tree + capacity buckets.
+
+    * ``free`` — dense per-node free-slot mirror (0 for DOWN/DRAINED nodes);
+    * a max segment tree over node ids answering ``first_at_least(s, start)``
+      (leftmost node id >= start with free >= s) in O(log nodes);
+    * ``_buckets[c]`` — a lazy-deletion min-heap of node ids whose mirror
+      value is ``c``.  Every transition *into* capacity ``c`` pushes a fresh
+      entry; entries whose node has since moved on (``free[id] != c``) are
+      stale and may be discarded whenever they surface at the top of the
+      heap.  That discard contract is what lets policy-cycle overlays
+      temporarily retarget mirror values (trial allocation) and restore them
+      with plain ``set_free`` calls — restoring pushes fresh entries, so
+      nothing is ever lost with the stale ones.
+
+    All updates are O(log nodes); nothing here is ever rebuilt per cycle.
+    """
+
+    def __init__(self) -> None:
+        self._size = 1                  # segment-tree leaf count (power of 2)
+        self._tree: List[int] = [0, 0]
+        self.free: List[int] = []       # dense mirror, indexed by node id
+        self._buckets: Dict[int, List[int]] = {}
+        self._pushes = 0                # bucket entries since last compaction
+
+    # ------------------------------------------------------------ sizing
+    def ensure(self, n: int) -> None:
+        """Track node ids [0, n); grows the tree (rare: topology changes)."""
+        if n <= len(self.free):
+            return
+        self.free.extend([0] * (n - len(self.free)))
+        if n > self._size:
+            size = self._size
+            while size < n:
+                size <<= 1
+            tree = [0] * (2 * size)
+            tree[size:size + len(self.free)] = self.free
+            for i in range(size - 1, 0, -1):
+                tree[i] = max(tree[2 * i], tree[2 * i + 1])
+            self._size, self._tree = size, tree
+
+    # ----------------------------------------------------------- updates
+    def set_free(self, nid: int, c: int) -> None:
+        """Point-update a node's free-slot count (mirror + tree + bucket)."""
+        self.free[nid] = c
+        i = nid + self._size
+        tree = self._tree
+        tree[i] = c
+        i >>= 1
+        while i:
+            v = max(tree[2 * i], tree[2 * i + 1])
+            if tree[i] == v:
+                break
+            tree[i] = v
+            i >>= 1
+        if c > 0:
+            heapq.heappush(self._buckets.setdefault(c, []), nid)
+            self._pushes += 1
+            # workloads that never best-fit (FIFO, backfill) push entries
+            # that nothing pops; periodically rebuild the buckets from the
+            # mirror so stale entries cannot accumulate beyond O(nodes) —
+            # amortized O(1) per update
+            if self._pushes > max(4 * len(self.free), 256):
+                self._compact()
+
+    def _compact(self) -> None:
+        buckets: Dict[int, List[int]] = {}
+        for nid, c in enumerate(self.free):
+            if c > 0:
+                buckets.setdefault(c, []).append(nid)   # ascending = a heap
+        self._buckets = buckets
+        self._pushes = 0
+
+    # ----------------------------------------------------------- queries
+    def max_free(self) -> int:
+        return self._tree[1]
+
+    def first_at_least(self, s: int, start: int = 0) -> Optional[int]:
+        """Leftmost node id >= ``start`` with ``free >= s`` (s >= 1)."""
+        tree, size = self._tree, self._size
+        if start >= size or tree[1] < s:
+            return None
+        i = start + size
+        if tree[i] < s:
+            while True:
+                while i & 1:
+                    i >>= 1
+                if i == 0:
+                    return None
+                i += 1
+                if tree[i] >= s:
+                    break
+        while i < size:
+            i <<= 1
+            if tree[i] < s:
+                i += 1
+        return i - size
+
+    def pop_min_id_at(self, c: int, skip=frozenset()) -> Optional[int]:
+        """Pop and return the smallest valid node id at capacity ``c``.
+
+        Stale entries (``free[id] != c``) are discarded.  Ids in ``skip``
+        are also discarded — callers use this for overlay-patched nodes they
+        track elsewhere and re-push on restore (see the class docstring).
+        Returns None when the bucket has no valid non-skipped id.
+        """
+        heap = self._buckets.get(c)
+        while heap:
+            nid = heap[0]
+            if self.free[nid] != c or nid in skip:
+                heapq.heappop(heap)
+                continue
+            return heapq.heappop(heap)
+        return None
+
+    def push_at(self, c: int, nid: int) -> None:
+        """Return a popped-but-unconsumed id to its bucket."""
+        if c > 0:
+            heapq.heappush(self._buckets.setdefault(c, []), nid)
+
+    def ids_at(self, c: int) -> Set[int]:
+        """Valid node ids at capacity ``c`` (non-destructive; for tests)."""
+        return {i for i in self._buckets.get(c, ()) if self.free[i] == c}
 
 
 class NodeState(enum.Enum):
@@ -83,6 +218,7 @@ class ResourceManager:
         self.licenses: Dict[str, int] = {}
         self.heartbeat_timeout = heartbeat_timeout
         self._down_callbacks = []
+        self._up_callbacks = []
         # incremental aggregates over UP nodes
         self._up_ids: Set[int] = set()
         self._up_cache: Optional[List[Node]] = None
@@ -90,6 +226,7 @@ class ResourceManager:
         self._free_cache: Optional[List[Node]] = None
         self._free_slots = 0
         self._total_slots = 0
+        self.index = CapacityIndex()       # capacity-bucketed node index
 
     # ---------------------------------------------------- aggregate upkeep
     def _join_up(self, node: Node) -> None:
@@ -98,6 +235,7 @@ class ResourceManager:
         self._free_slots += node.free_slots
         if node.free_slots > 0:
             self._free_ids.add(node.node_id)
+        self.index.set_free(node.node_id, node.free_slots)
         self._up_cache = None
         self._free_cache = None
 
@@ -107,6 +245,7 @@ class ResourceManager:
         self._free_ids.discard(node.node_id)
         self._total_slots -= node.slots
         self._free_slots -= node.free_slots
+        self.index.set_free(node.node_id, 0)
         self._up_cache = None
         self._free_cache = None
 
@@ -114,6 +253,7 @@ class ResourceManager:
     def add_nodes(self, count: int, slots: int = 1, mem_mb: int = 1 << 20,
                   accelerators: int = 0, attrs: Optional[Dict] = None) -> List[int]:
         start = len(self.nodes)
+        self.index.ensure(start + count)
         ids = []
         for i in range(start, start + count):
             node = Node(i, slots=slots, mem_mb=mem_mb,
@@ -134,6 +274,8 @@ class ResourceManager:
         if node.state is NodeState.DOWN:
             node.state = NodeState.UP   # node rejoined (elastic growth)
             self._join_up(node)
+            for cb in self._up_callbacks:
+                cb(node_id)             # wake the scheduler: new capacity
 
     def check_heartbeats(self, now: float) -> List[int]:
         """Mark nodes DOWN whose heartbeat lapsed; returns newly-down ids."""
@@ -159,6 +301,9 @@ class ResourceManager:
 
     def on_node_down(self, callback) -> None:
         self._down_callbacks.append(callback)
+
+    def on_node_up(self, callback) -> None:
+        self._up_callbacks.append(callback)
 
     def mark_down(self, node_id: int) -> List[Tuple[int, int]]:
         """Fail a node; returns the task keys that were running on it."""
@@ -191,6 +336,7 @@ class ResourceManager:
         task.node_id = node_id
         if node.state is NodeState.UP:
             self._free_slots -= task.request.slots
+            self.index.set_free(node_id, node.free_slots)
             if node.free_slots <= 0:
                 self._free_ids.discard(node_id)
                 self._free_cache = None
@@ -204,6 +350,7 @@ class ResourceManager:
             node.release(task)
             if held and node.state is NodeState.UP:
                 self._free_slots += task.request.slots
+                self.index.set_free(node.node_id, node.free_slots)
                 if node.free_slots > 0 and node.node_id not in self._free_ids:
                     self._free_ids.add(node.node_id)
                     self._free_cache = None
@@ -237,11 +384,23 @@ class ResourceManager:
         return [n for n in self.up_nodes() if n.fits(req)]
 
     def first_fit(self, req: ResourceRequest) -> Optional[Node]:
-        """First fitting node in node-id order, via the free-capacity index."""
+        """First fitting node in node-id order, via the capacity index:
+        O(log nodes) tree descents instead of a free-list scan (and no
+        ``free_nodes()`` cache rebuild churn when allocations saturate
+        nodes mid-walk, as gang trial allocation does)."""
         if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
             return None
-        pool = self.free_nodes() if req.slots > 0 else self.up_nodes()
-        for n in pool:
-            if n.fits(req):
-                return n
-        return None
+        if req.slots <= 0:
+            for n in self.up_nodes():   # zero-slot: full nodes qualify
+                if n.fits(req):
+                    return n
+            return None
+        start = 0
+        while True:
+            nid = self.index.first_at_least(req.slots, start)
+            if nid is None:
+                return None
+            node = self.nodes[nid]
+            if node.fits(req):
+                return node
+            start = nid + 1

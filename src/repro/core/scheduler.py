@@ -105,7 +105,15 @@ class Scheduler:
         self._nonunit = 0                # active jobs ineligible for fast path
         self._unit: Dict[int, bool] = {}
         self._running_tasks: Dict[Tuple[int, int], Task] = {}
+        # policy-path accounting: WAITING/PREEMPTED tasks of eligible jobs
+        # (== the seed's per-cycle sum(len(j.pending_tasks())) rescan), plus
+        # the zero-slot subset (they can place on slot-saturated nodes, so
+        # they gate the policies' exhausted-capacity early exit)
+        self._pending = 0
+        self._pending_zero = 0
+        self._job_pending: Dict[int, int] = {}
         self.rm.on_node_down(self._node_down)
+        self.rm.on_node_up(self._node_up)
 
     # ----------------------------------------------------------- submit
     def submit(self, job: Job) -> None:
@@ -120,9 +128,38 @@ class Scheduler:
             self._nonunit += 1
         if job.state is not JobState.PENDING:     # eligible now -> counted
             self._depth += job.n_tasks
+            self._count_in(job)
         self.stats[job.job_id] = JobStats(
             job_id=job.job_id, submit_time=now, n_tasks=job.n_tasks)
         self._request_cycle()
+
+    # ------------------------------------------------ pending accounting
+    def _count_in(self, job: Job) -> None:
+        """Add a newly-eligible job's pending tasks to the policy counters."""
+        n = z = 0
+        for t in job.tasks:
+            if t.state in (TaskState.WAITING, TaskState.PREEMPTED):
+                n += 1
+                if t.request.slots <= 0:
+                    z += 1
+        self._pending += n
+        self._pending_zero += z
+        self._job_pending[job.job_id] = n
+
+    def _count_out(self, job: Job) -> None:
+        """Drop a retiring job's remaining pending tasks from the counters."""
+        self._pending -= self._job_pending.pop(job.job_id, 0)
+        for t in job.tasks:
+            if (t.state in (TaskState.WAITING, TaskState.PREEMPTED)
+                    and t.request.slots <= 0):
+                self._pending_zero -= 1
+
+    def _count_requeued(self, task: Task) -> None:
+        self._pending += 1
+        if task.request.slots <= 0:
+            self._pending_zero += 1
+        self._job_pending[task.job_id] = \
+            self._job_pending.get(task.job_id, 0) + 1
 
     # ----------------------------------------------------------- cycles
     def _request_cycle(self) -> None:
@@ -171,7 +208,12 @@ class Scheduler:
         while self._requeue:
             t = self._requeue.popleft()
             self._depth -= 1
-            if t.state in (TaskState.WAITING, TaskState.PREEMPTED):
+            # skip ghosts: a job can retire (e.g. its speculative clone
+            # finished) while a failed original still sits here WAITING —
+            # dispatching it would run work for a finished job and corrupt
+            # the pending counters
+            if (t.state in (TaskState.WAITING, TaskState.PREEMPTED)
+                    and t.job_id in self._active_jobs):
                 return t
         while True:
             job = self.qm.next_eligible()
@@ -219,14 +261,50 @@ class Scheduler:
 
     def _cycle_policy(self) -> None:
         self._free_stack = []  # invalidated by generic allocation
-        jobs = [j for j in self.qm.queued_jobs(self.loop.now)
-                if j.state in (JobState.QUEUED, JobState.RUNNING)]
-        if not jobs:
-            return
-        depth = sum(len(j.pending_tasks()) for j in jobs)
-        assignments = self.policy.assign(jobs, self.rm, self.loop.now)
-        if self.config.preemption and not assignments and jobs:
-            assignments = self._try_preempt(jobs[0])
+        now = self.loop.now
+        # the latency model charges the seed's recomputed
+        # sum(len(j.pending_tasks())) depth, which the incremental counter
+        # reproduces exactly
+        depth = self._pending
+        self.policy.zero_slot_backlog = self._pending_zero
+        try:
+            if self.config.preemption:
+                # exact seed walk: the preemption beneficiary is the head
+                # of the full eligible list even when it has no pending
+                # tasks
+                head: Optional[Job] = None
+                jobs: List[Job] = []
+                for j in self.qm.iter_queued(now):
+                    if j.state not in (JobState.QUEUED, JobState.RUNNING):
+                        continue
+                    if head is None:
+                        head = j
+                    if self._job_pending.get(j.job_id, 0) > 0:
+                        jobs.append(j)
+                if head is None:
+                    return
+                assignments = (self.policy.assign(jobs, self.rm, now)
+                               if jobs else [])
+                if not assignments:
+                    assignments = self._try_preempt(head)
+            else:
+                if self._pending <= 0:
+                    return      # nothing placeable; skip the job walk
+                if self._pending_zero == 0 and self.rm.free_slots() <= 0:
+                    return      # no slot anywhere, no slot-free work
+                # lazy walk: jobs with no pending tasks are assignment
+                # no-ops in every policy, so they are filtered out, and
+                # early-exiting policies only consume the prefix they can
+                # still place into
+                job_pending = self._job_pending
+                jobs_iter = (j for j in self.qm.iter_queued(now)
+                             if j.state in (JobState.QUEUED, JobState.RUNNING)
+                             and job_pending.get(j.job_id, 0) > 0)
+                assignments = self.policy.assign(jobs_iter, self.rm, now)
+        finally:
+            # the hint is cycle-scoped; direct assign() callers (tests,
+            # other engines reusing this policy object) must see None
+            self.policy.zero_slot_backlog = None
         for task, nid in assignments:
             self._dispatch(task, nid, depth)
             depth -= 1
@@ -237,6 +315,12 @@ class Scheduler:
         c = self.profile.central_cost + self.profile.queue_coeff * queue_depth
         self.sched_clock = max(self.sched_clock, now) + c
         self.rm.allocate(task, node_id)
+        if task.state in (TaskState.WAITING, TaskState.PREEMPTED):
+            self._pending -= 1
+            if task.request.slots <= 0:
+                self._pending_zero -= 1
+            self._job_pending[task.job_id] = \
+                self._job_pending.get(task.job_id, 1) - 1
         task.state = TaskState.DISPATCHED
         task.dispatch_time = self.sched_clock
         task.attempts += 1
@@ -254,10 +338,27 @@ class Scheduler:
         if self.executor is not None and task.payload is not None:
             self.loop.at(start, self._run_payload, task)
         else:
-            self.loop.at(start + task.duration, self._task_end, task, True)
+            self.loop.at(start + task.duration, self._finish_sim, task,
+                         task.attempts)
 
     def _run_payload(self, task: Task) -> None:
-        self.executor.run(task, lambda ok: self._task_end(task, ok))
+        attempt = task.attempts
+
+        def done(ok: bool) -> None:
+            # same staleness guard as _finish_sim: the node may have failed
+            # and the task re-dispatched while this payload was in flight
+            if task.attempts == attempt:
+                self._task_end(task, ok)
+
+        self.executor.run(task, done)
+
+    def _finish_sim(self, task: Task, attempt: int) -> None:
+        """Virtual-duration completion, guarded by the dispatch attempt: a
+        task requeued by a node failure (or preemption) and re-dispatched is
+        RUNNING again when the *stale* pre-failure completion event fires —
+        without the guard that event would finish the restarted work early."""
+        if task.attempts == attempt:
+            self._task_end(task, True)
 
     # ------------------------------------------------------- completion
     def _task_end(self, task: Task, ok: bool) -> None:
@@ -296,6 +397,7 @@ class Scheduler:
                 task.state = TaskState.WAITING
                 self._requeue.append(task)
                 self._depth += 1
+                self._count_requeued(task)
             else:
                 job.failed_tasks += 1
         st = self.stats[job.job_id]
@@ -309,9 +411,11 @@ class Scheduler:
         """Terminal bookkeeping: depth, fast-path counters, dependents."""
         if job.state in (JobState.QUEUED, JobState.RUNNING):
             self._depth -= job.n_tasks - self._cursor.get(job.job_id, 0)
+            self._count_out(job)
         released = self.qm.job_finished(job, state, now)
         for dep in released:
             self._depth += dep.n_tasks - self._cursor.get(dep.job_id, 0)
+            self._count_in(dep)
         if not self._unit.pop(job.job_id, True):
             self._nonunit -= 1
         del self._active_jobs[job.job_id]
@@ -323,6 +427,15 @@ class Scheduler:
             if self._fast and task.request.slots == 1 \
                     and task.node_id is not None:
                 self._free_stack.append(task.node_id)
+        elif task.state in (TaskState.WAITING, TaskState.PREEMPTED):
+            job = self._active_jobs.get(task.job_id)
+            if job is not None and job.state in (JobState.QUEUED,
+                                                 JobState.RUNNING):
+                self._pending -= 1
+                if task.request.slots <= 0:
+                    self._pending_zero -= 1
+                self._job_pending[task.job_id] = \
+                    self._job_pending.get(task.job_id, 1) - 1
         task.state = TaskState.CANCELLED
 
     # --------------------------------------------- fault tolerance paths
@@ -350,6 +463,7 @@ class Scheduler:
             if t.attempts <= job.max_restarts:
                 self._requeue.append(t)
                 self._depth += 1
+                self._count_requeued(t)
             else:
                 t.state = TaskState.FAILED
                 job.failed_tasks += 1
@@ -360,6 +474,16 @@ class Scheduler:
             if job.job_id in self._active_jobs and job.done:
                 self._retire(job, JobState.FAILED, now)
         self._request_cycle()
+
+    def _node_up(self, node_id: int) -> None:
+        """A rejoined node is fresh capacity: without a wake-up, work
+        blocked on the lost capacity (e.g. a gang job) would stall forever
+        once the event loop drains."""
+        if self._fast:
+            node = self.rm.nodes[node_id]
+            self._free_stack.extend([node_id] * node.free_slots)
+        if self._active_jobs:
+            self._request_cycle()
 
     def fail_node(self, node_id: int) -> None:
         self.rm.mark_down(node_id)
@@ -394,6 +518,7 @@ class Scheduler:
                 job.n_clones += 1
                 if job.state in (JobState.QUEUED, JobState.RUNNING):
                     self._depth += 1     # clone extends the job's task span
+                    self._count_requeued(clone)  # WAITING until dispatched
                 self._clones[t.key] = clone
                 self._dispatch(clone, nid, self._queue_depth())
 
@@ -416,6 +541,7 @@ class Scheduler:
                     t.node_id = None
                     self._requeue.append(t)
                     self._depth += 1
+                    self._count_requeued(t)
                     freed += t.request.slots
                 if freed >= need:
                     break

@@ -1,0 +1,223 @@
+"""Per-cycle-scan policies, frozen as the golden reference.
+
+These are verbatim copies of the `core/policies.py` implementations as of
+PR 1 (commit d38a3d0) — the state the capacity-index rewrite replaced: full
+node rescans and per-cycle free-map rebuilds.  (PR 1 itself had already
+made one deliberate semantic change vs the original seed: zero-slot
+requests first-fit over the UP list instead of best-fitting over all UP
+nodes, because the free-capacity index excludes slot-saturated nodes.)
+
+They are deliberately slow and deliberately unchanged:
+`test_policy_equivalence.py` asserts that the indexed policies in
+`repro.core.policies` produce bit-identical ``(task, node)`` assignment
+sequences against these references across randomized scenarios.  Do not
+"fix" or optimize this file — any intentional semantic change to the real
+policies must land here too, in the same commit, with the equivalence
+tests updated.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.job import Job, Task
+from repro.core.policies import Assignment, LocalityHint, Policy
+from repro.core.resources import Node, ResourceManager
+
+
+class ReferencePolicy(Policy):
+    """Base for the frozen seed implementations (scan-the-world helpers)."""
+
+    name = "reference"
+
+    @staticmethod
+    def _zero_slot_fit(task: Task, rm: ResourceManager) -> Optional[int]:
+        """Seed behaviour: rescan the full UP list per call."""
+        for n in rm.up_nodes():
+            if n.fits(task.request):
+                return n.node_id
+        return None
+
+    @staticmethod
+    def _gang_assign(job: Job, rm: ResourceManager) -> Optional[List[Assignment]]:
+        """All-or-nothing placement for a parallel job (trial allocation)."""
+        picked: List[Assignment] = []
+        try:
+            for t in job.pending_tasks():
+                node = ReferencePolicy._seed_first_fit(t.request, rm)
+                if node is None:
+                    return None
+                rm.allocate(t, node.node_id)
+                picked.append((t, node.node_id))
+            return picked
+        finally:
+            for t, _ in picked:
+                rm.release(t)
+                t.node_id = None
+
+    @staticmethod
+    def _seed_first_fit(req, rm: ResourceManager) -> Optional[Node]:
+        """Seed ``ResourceManager.first_fit``: linear scan in node-id order."""
+        if any(rm.licenses.get(l, 0) <= 0 for l in req.licenses):
+            return None
+        pool = rm.free_nodes() if req.slots > 0 else rm.up_nodes()
+        for n in pool:
+            if n.fits(req):
+                return n
+        return None
+
+
+class ReferenceFIFOPolicy(ReferencePolicy):
+    """Seed FIFO: first-fit scans, head-of-line blocking on gang jobs."""
+
+    name = "fifo-reference"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        for job in jobs:
+            if job.parallel:
+                gang = self._gang_assign(job, rm)
+                if gang is None:
+                    break  # strict FIFO: do not overtake the head job
+                for t, nid in gang:
+                    rm.allocate(t, nid)
+                out.extend(gang)
+                continue
+            blocked = False
+            for t in job.pending_tasks():
+                node = self._seed_first_fit(t.request, rm)
+                if node is None:
+                    blocked = True
+                    break
+                rm.allocate(t, node.node_id)
+                out.append((t, node.node_id))
+            if blocked:
+                break
+        for t, _ in out:
+            rm.release(t)   # engine commits; this was trial bookkeeping
+            t.node_id = None
+        return out
+
+
+class ReferenceBackfillPolicy(ReferencePolicy):
+    """Seed EASY backfill: per-cycle free-map rebuild + full scans."""
+
+    name = "backfill-reference"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        # free-capacity snapshot rebuilt every cycle (the seed's way)
+        pool = rm.free_nodes()
+        free = {n.node_id: n.free_slots for n in pool}
+        nodes = {n.node_id: n for n in pool}
+
+        def try_fit(task: Task) -> Optional[int]:
+            if task.request.slots <= 0:
+                return ReferencePolicy._zero_slot_fit(task, rm)
+            for nid, slots in free.items():
+                if slots >= task.request.slots and nodes[nid].fits(task.request):
+                    return nid
+            return None
+
+        lic = dict(rm.licenses)
+        reservation_time: Optional[float] = None
+        head_blocked = False
+        for job in jobs:
+            tasks = job.pending_tasks()
+            if job.parallel:
+                need = sum(t.request.slots for t in tasks)
+                have = sum(free.values())
+                if need > have:
+                    if not head_blocked:
+                        head_blocked = True
+                        # estimate when enough slots free up (shadow time)
+                        reservation_time = now + max(
+                            (t.duration for t in tasks), default=0.0)
+                    continue
+            placed: List[Assignment] = []
+            ok = True
+            for t in tasks:
+                if head_blocked and reservation_time is not None:
+                    # only backfill tasks that end before the reservation
+                    if now + t.duration > reservation_time:
+                        ok = False
+                        break
+                if any(lic.get(l, 0) <= 0 for l in t.request.licenses):
+                    ok = False
+                    break
+                nid = try_fit(t)
+                if nid is None:
+                    ok = False
+                    break
+                free[nid] = free.get(nid, 0) - t.request.slots
+                for l in t.request.licenses:
+                    lic[l] -= 1
+                placed.append((t, nid))
+            if job.parallel and not ok:
+                for t, nid in placed:
+                    free[nid] += t.request.slots
+                continue
+            out.extend(placed)
+        return out
+
+
+class ReferenceBinPackingPolicy(ReferencePolicy):
+    """Seed best-fit-decreasing: full node scan per task."""
+
+    name = "binpack-reference"
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        nodes = sorted(rm.free_nodes(), key=lambda n: n.free_slots)
+        free = {n.node_id: n.free_slots for n in nodes}
+        lic = dict(rm.licenses)
+        for job in jobs:
+            for t in job.pending_tasks():
+                if any(lic.get(l, 0) <= 0 for l in t.request.licenses):
+                    continue
+                best, best_left = None, None
+                if t.request.slots <= 0:
+                    best = self._zero_slot_fit(t, rm)
+                else:
+                    for n in nodes:
+                        left = free[n.node_id] - t.request.slots
+                        if left >= 0 and n.fits(t.request):
+                            if best is None or left < best_left:
+                                best, best_left = n.node_id, left
+                if best is None:
+                    continue
+                free[best] = free.get(best, 0) - t.request.slots
+                for l in t.request.licenses:
+                    lic[l] -= 1
+                out.append((t, best))
+        return out
+
+
+class ReferenceLocalityPolicy(ReferencePolicy):
+    """Seed locality: candidate list rebuilt per task over all free nodes."""
+
+    name = "locality-reference"
+
+    def __init__(self, hints=None):
+        self.hints = hints or {}
+
+    def assign(self, jobs, rm, now):
+        out: List[Assignment] = []
+        pool = rm.free_nodes()
+        free = {n.node_id: n.free_slots for n in pool}
+        nodes = {n.node_id: n for n in pool}
+        for job in jobs:
+            hint = self.hints.get(job.job_id, LocalityHint())
+            for t in job.pending_tasks():
+                if t.request.slots <= 0:
+                    cands = [n.node_id for n in rm.up_nodes()
+                             if n.fits(t.request)]
+                else:
+                    cands = [nid for nid, s in free.items()
+                             if s >= t.request.slots
+                             and nodes[nid].fits(t.request)]
+                if not cands:
+                    continue
+                nid = max(cands, key=lambda n: hint.scores.get(n, 0.0))
+                free[nid] = free.get(nid, 0) - t.request.slots
+                out.append((t, nid))
+        return out

@@ -1,0 +1,165 @@
+"""Property tests for the capacity-bucketed node index (resources.py).
+
+Invariant style follows tests/test_hotpath.py: drive randomized event
+interleavings (allocate / release / node-failure / heartbeat-lapse / drain /
+rejoin / topology growth) through the ResourceManager and, after every
+event, compare the incrementally-maintained ``CapacityIndex`` against a
+from-scratch rebuild of what it should contain.
+"""
+import random
+
+import pytest
+
+from repro.core import Job, ResourceManager, ResourceRequest
+from repro.core.resources import CapacityIndex, NodeState
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def expected_free(rm):
+    """From-scratch rebuild: what the mirror must hold for every node."""
+    return {nid: (n.free_slots if n.state is NodeState.UP else 0)
+            for nid, n in rm.nodes.items()}
+
+
+def assert_index_matches_rebuild(rm, ctx=""):
+    exp = expected_free(rm)
+    idx = rm.index
+    for nid, want in exp.items():
+        assert idx.free[nid] == want, (ctx, nid)
+    # tree answers every first-fit query like a linear scan would
+    max_req = max(list(exp.values()) + [1]) + 1
+    for s in range(1, max_req + 1):
+        for start in (0, len(rm.nodes) // 2):
+            brute = next((nid for nid in sorted(exp)
+                          if nid >= start and exp[nid] >= s), None)
+            assert idx.first_at_least(s, start) == brute, (ctx, s, start)
+    assert idx.max_free() == max(list(exp.values()) + [0]), ctx
+    # bucket contents equal a from-scratch rebuild at every capacity
+    for c in set(exp.values()) | {1, 2}:
+        if c <= 0:
+            continue
+        want_ids = {nid for nid, v in exp.items() if v == c}
+        assert idx.ids_at(c) == want_ids, (ctx, c)
+
+
+def drive(seed, steps=120):
+    rng = random.Random(seed)
+    rm = ResourceManager(heartbeat_timeout=5.0)
+    rm.add_nodes(rng.randint(2, 6), slots=rng.randint(1, 4))
+    allocated = []
+    now = 0.0
+    for step in range(steps):
+        now += 1.0
+        op = rng.random()
+        if op < 0.35:
+            req = ResourceRequest(slots=rng.randint(1, 3))
+            t = Job.array(1, request=req).tasks[0]
+            node = rm.first_fit(req)
+            if node is not None:
+                rm.allocate(t, node.node_id)
+                allocated.append(t)
+        elif op < 0.6 and allocated:
+            rm.release(allocated.pop(rng.randrange(len(allocated))))
+        elif op < 0.7:
+            nid = rng.randrange(len(rm.nodes))
+            if rm.nodes[nid].state is NodeState.UP:
+                rm.mark_down(nid)
+                allocated = [t for t in allocated if t.node_id != nid]
+        elif op < 0.8:
+            # heartbeat-lapse: beat a few nodes, time out the rest
+            for nid in range(len(rm.nodes)):
+                if rng.random() < 0.5:
+                    rm.heartbeat(nid, now)
+            lapsed = rm.check_heartbeats(now + rng.random() * 10)
+            allocated = [t for t in allocated if t.node_id not in lapsed]
+        elif op < 0.9:
+            nid = rng.randrange(len(rm.nodes))
+            rm.heartbeat(nid, now)          # rejoin if DOWN
+        elif op < 0.95:
+            nid = rng.randrange(len(rm.nodes))
+            if rm.nodes[nid].state is NodeState.UP \
+                    and not rm.nodes[nid].running:
+                rm.drain(nid)
+        else:
+            rm.add_nodes(1, slots=rng.randint(1, 4))
+        assert_index_matches_rebuild(rm, ctx=(seed, step))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_index_matches_rebuild_under_churn(seed):
+    drive(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_index_matches_rebuild_under_churn_fuzzed(seed):
+        drive(seed, steps=40)
+
+
+def test_tree_first_at_least_brute_force():
+    rng = random.Random(0)
+    for trial in range(30):
+        n = rng.randint(1, 40)
+        idx = CapacityIndex()
+        idx.ensure(n)
+        vals = [rng.randint(0, 6) for _ in range(n)]
+        for i, v in enumerate(vals):
+            idx.set_free(i, v)
+        for _ in range(50):
+            s = rng.randint(1, 7)
+            start = rng.randint(0, n)
+            brute = next((i for i in range(start, n) if vals[i] >= s), None)
+            assert idx.first_at_least(s, start) == brute, (trial, s, start)
+        assert idx.max_free() == max(vals)
+
+
+def test_bucket_pop_discards_stale_and_skipped_entries():
+    idx = CapacityIndex()
+    idx.ensure(4)
+    for i, v in enumerate((3, 3, 2, 3)):
+        idx.set_free(i, v)
+    idx.set_free(1, 1)                       # node 1's bucket-3 entry stale
+    assert idx.pop_min_id_at(3, skip={0}) == 3   # 0 skipped+discarded, 1 stale
+    idx.push_at(3, 3)
+    idx.set_free(0, 3)       # the discard contract: restore re-pushes
+    assert idx.pop_min_id_at(3) == 0
+    assert idx.pop_min_id_at(2) == 2
+    assert idx.pop_min_id_at(2) is None          # consumed
+    idx.set_free(2, 2)                           # transition back in
+    assert idx.pop_min_id_at(2) == 2
+
+
+def test_bucket_compaction_bounds_stale_entries():
+    """Workloads that never pop buckets (FIFO churn) must not accumulate
+    entries beyond O(nodes): heavy set_free traffic triggers compaction."""
+    idx = CapacityIndex()
+    idx.ensure(8)
+    for round_ in range(3000):
+        for nid in range(8):
+            idx.set_free(nid, 1 + (round_ + nid) % 4)
+    total = sum(len(h) for h in idx._buckets.values())
+    assert total <= 4 * 8 + 8 + 256, total
+    # and the contents still match a rebuild
+    for c in range(1, 5):
+        assert idx.ids_at(c) == {n for n in range(8) if idx.free[n] == c}
+
+
+def test_ensure_growth_preserves_values():
+    idx = CapacityIndex()
+    idx.ensure(3)
+    for i, v in enumerate((1, 5, 2)):
+        idx.set_free(i, v)
+    idx.ensure(70)                # forces a tree rebuild
+    assert idx.free[:3] == [1, 5, 2]
+    assert idx.first_at_least(5) == 1
+    assert idx.first_at_least(2) == 1
+    assert idx.first_at_least(2, start=2) == 2
+    assert idx.first_at_least(1, start=60) is None
+    idx.set_free(64, 7)
+    assert idx.first_at_least(6) == 64

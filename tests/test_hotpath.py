@@ -166,6 +166,49 @@ def test_incremental_depth_matches_rescan_with_failures_and_requeue():
     assert s._queue_depth() == seed_queue_depth(s)
 
 
+def seed_policy_depth(s: Scheduler) -> int:
+    """The seed policy path's per-cycle sum(len(j.pending_tasks())) rescan."""
+    return sum(len(j.pending_tasks())
+               for j in s.qm.queued_jobs(s.loop.now)
+               if j.state in (JobState.QUEUED, JobState.RUNNING))
+
+
+def test_incremental_pending_counter_matches_policy_rescan():
+    """The policy path charges the latency model `self._pending`; it must
+    track the seed's recomputed pending-task sum through submissions,
+    dependencies, requeues and node failures."""
+    from repro.core import BackfillPolicy
+    from repro.core.job import ResourceRequest
+
+    rng = random.Random(7)
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=2)
+    s = Scheduler(rm, policy=BackfillPolicy(), profile=FAST)
+    jobs = []
+    until = 0.0
+    for i in range(24):
+        req = ResourceRequest(slots=rng.choice((0, 1, 1, 2)))
+        j = Job.array(rng.randint(1, 5), duration=rng.random() * 2,
+                      request=req, priority=float(rng.randint(0, 2)))
+        j.max_restarts = 1
+        if jobs and rng.random() < 0.3:
+            j.depends_on = (rng.choice(jobs).job_id,)
+        jobs.append(j)
+        s.submit(j)
+        assert s._pending == seed_policy_depth(s)
+        until += 0.5
+        s.run(until=until)
+        assert s._pending == seed_policy_depth(s)
+        if i == 10:
+            running = [t.node_id for j2 in jobs for t in j2.tasks
+                       if t.state is TaskState.RUNNING]
+            if running:
+                s.fail_node(running[0])
+                assert s._pending == seed_policy_depth(s)
+    s.run()
+    assert s._pending == seed_policy_depth(s) == 0
+
+
 # --------------------------------------------------- dependency release
 def test_reverse_index_releases_dependents_like_full_scan():
     rm = ResourceManager()

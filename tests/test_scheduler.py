@@ -167,6 +167,23 @@ def test_node_failure_restarts_tasks():
     assert any(t.attempts > 1 for t in job.tasks)
 
 
+def test_restarted_task_runs_full_duration_after_node_failure():
+    """A stale pre-failure completion event must not finish the restarted
+    attempt early (the restart runs its full duration from its new start)."""
+    s = make_sched(nodes=2)
+    job = Job.array(2, duration=10.0)
+    job.max_restarts = 2
+    s.submit(job)
+    s.loop.run(until=2.0)
+    s.fail_node(job.tasks[0].node_id)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    restarted = [t for t in job.tasks if t.attempts > 1]
+    assert restarted
+    for t in restarted:
+        assert t.end_time - t.start_time >= 10.0 - 1e-6
+
+
 def test_node_failure_without_restart_budget_fails_task():
     s = make_sched(nodes=2)
     job = Job.array(2, duration=4.0)   # max_restarts = 0
