@@ -4,6 +4,13 @@ Task sets (Table 9): t in {1, 5, 30, 60}s with T_job fixed at 240 s per
 processor (n = 240/t), P = 1408 single-slot nodes. Each (scheduler, set) is
 run `trials` times; results cached to experiments/bench_cache.json so the
 figure benchmarks reuse one simulation pass.
+
+All runs flow through the workload subsystem (``repro.workloads``): the task
+set is a spec stream fed by the StreamingInjector.  The paper grid streams a
+single job array (bit-identical to submitting it directly — pinned against
+the committed cache); scaled grids (P >= 100k, n up to 240, tens of millions
+of tasks) stream per-wave arrays of P tasks under an active-job cap so peak
+materialized state stays O(P · window) instead of O(n · P).
 """
 from __future__ import annotations
 
@@ -11,13 +18,15 @@ import json
 import os
 import sys
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import (  # noqa: E402
-    FAMILIES, Job, ResourceManager, Scheduler, aggregate)
+    FAMILIES, ResourceManager, Scheduler, aggregate)
 from repro.core.multilevel import MultilevelConfig  # noqa: E402
+from repro.workloads import (  # noqa: E402
+    MetricsTap, StreamingInjector, constant_taskset)
 
 P = 1408
 TASK_SETS: Tuple[Tuple[str, float, int], ...] = (
@@ -31,32 +40,63 @@ SCHEDULERS = ("slurm", "grid_engine", "mesos", "yarn")
 TRIALS = int(os.environ.get("BENCH_TRIALS", "3"))
 CACHE = Path(__file__).resolve().parent.parent / "experiments" / "bench_cache.json"
 
+# scaled-grid streaming defaults: waves of P tasks, at most 8 jobs in flight
+STREAM_ACTIVE_JOBS = 8
+
 
 def run_taskset(family: str, n: int, t: float, multilevel: bool = False,
-                seed: int = 0, processors: int = P) -> Dict:
+                seed: int = 0, processors: int = P,
+                wave_tasks: int = 0, max_active_jobs: int = 0,
+                tap: Optional[MetricsTap] = None) -> Dict:
     """One Table-9 run; returns T_total, Delta-T and utilization.
 
     ``processors`` scales the paper's grid beyond its P=1408 (the 100k-slot
-    runs fit (t_s, alpha_s) at P >= 100,000).
+    runs fit (t_s, alpha_s) at P >= 100,000).  ``wave_tasks``/
+    ``max_active_jobs`` stream the set in bounded waves (see module
+    docstring); 0/0 reproduces the paper's single-array submission exactly.
     """
     prof = FAMILIES[family]
     rm = ResourceManager()
     rm.add_nodes(processors, slots=1)
     s = Scheduler(rm, profile=prof)
-    job = Job.array(n * processors, duration=t, name=f"{family}-{n}-{t}")
+    transform = None
     if multilevel:
-        job = aggregate(job, slots=processors, cfg=MultilevelConfig(mode="mimo"))
-    s.submit(job)
-    s.run()
-    st = s.stats[job.job_id]
-    T_total = st.last_end - st.submit_time
+        transform = lambda job: aggregate(  # noqa: E731
+            job, slots=processors, cfg=MultilevelConfig(mode="mimo"))
+    source = constant_taskset(t, n, processors, wave_tasks=wave_tasks,
+                              name=f"{family}-{n}-{t}")
+    inj = StreamingInjector(s, source, max_active_jobs=max_active_jobs,
+                            transform=transform, tap=tap)
+    inj.run()
+    assert inj.drained, "task set did not drain"
+    sts = list(s.stats.values())
+    T_total = (max(st.last_end for st in sts)
+               - min(st.submit_time for st in sts))
     T_job = t * n               # isolated per-processor work (original tasks)
-    return {
+    out = {
         "family": family, "n": n, "t": t, "multilevel": multilevel,
         "P": processors,
         "T_total": T_total, "T_job": T_job, "delta_t": T_total - T_job,
         "utilization": T_job / T_total,
     }
+    if wave_tasks or max_active_jobs:
+        out["stream"] = {"wave_tasks": wave_tasks,
+                         "max_active_jobs": max_active_jobs,
+                         "jobs": inj.submitted_jobs,
+                         "tasks": inj.submitted_tasks,
+                         "peak_active_jobs": inj.peak_active_jobs}
+    return out
+
+
+def load_grid_artifact(processors: int) -> Dict:
+    """The committed streamed-grid artifact for P processors (fig4/fig5
+    scaled views render from it instead of re-running the hour-long grid)."""
+    path = CACHE.parent / f"table9_grid_P{processors}.json"
+    if not path.exists():
+        raise SystemExit(
+            f"{path} missing — run: python benchmarks/table9_tasksets.py "
+            f"--P {processors} --grid")
+    return json.loads(path.read_text())
 
 
 def _key(family, n, t, multilevel, trial):

@@ -1,8 +1,16 @@
 """Paper Fig. 4: Delta-T vs n (tasks per processor), log-log, per scheduler,
-with the fitted power-law overlay."""
+with the fitted power-law overlay.
+
+``--P N`` renders the same figure data at a scaled processor count from the
+streamed-grid artifact (``experiments/table9_grid_P{N}.json``, produced by
+``table9_tasksets.py --P N --grid``) — the Figure-4-style latency-scaling
+view of the 100k-slot regime.
+"""
+import argparse
+
 import numpy as np
 
-from benchmarks.common import SCHEDULERS, all_results
+from benchmarks.common import SCHEDULERS, all_results, load_grid_artifact
 from repro.core import fit_power_law
 
 
@@ -27,5 +35,30 @@ def run(quiet: bool = False):
     return out
 
 
+def run_scaled(processors: int, quiet: bool = False):
+    """Fig-4 data at a scaled P, from the committed streamed-grid artifact."""
+    grid = load_grid_artifact(processors)
+    print(f"# Fig 4 at scale: Delta-T vs n, P={processors} "
+          f"(streamed, wave={grid['stream']['wave_tasks']})")
+    print("scheduler,n,delta_t_s,model_fit_s,t_s,alpha_s,r2")
+    out = {}
+    for fam, data in grid["families"].items():
+        fit = data["fit"]
+        rows = sorted(data["rows"], key=lambda r: r["n"])
+        for r in rows:
+            model = fit["t_s"] * r["n"] ** fit["alpha_s"]
+            print(f"{fam},{r['n']},{r['delta_t']:.2f},{model:.2f},"
+                  f"{fit['t_s']:.3g},{fit['alpha_s']:.3g},{fit['r2']:.4f}")
+        out[fam] = ([r["n"] for r in rows], [r["delta_t"] for r in rows], fit)
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--P", type=int, default=None,
+                    help="render from the scaled streamed-grid artifact")
+    args = ap.parse_args()
+    if args.P:
+        run_scaled(args.P)
+    else:
+        run()

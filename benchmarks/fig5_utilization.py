@@ -1,8 +1,16 @@
 """Paper Fig. 5: utilization vs task time, measured + both model forms
-(approximate U_c ~ 1/(1+t_s/t) and exact U_c^-1 = 1 + t_s n^a / (t n))."""
+(approximate U_c ~ 1/(1+t_s/t) and exact U_c^-1 = 1 + t_s n^a / (t n)).
+
+``--P N`` renders the same view at a scaled processor count from the
+streamed-grid artifact (``table9_tasksets.py --P N --grid``), where the
+short-task utilization collapse the paper measures at P=1408 reappears at
+100k slots with a much larger t_s.
+"""
+import argparse
+
 import numpy as np
 
-from benchmarks.common import SCHEDULERS, all_results
+from benchmarks.common import SCHEDULERS, all_results, load_grid_artifact
 from repro.core import fit_power_law, utilization_approx, utilization_constant
 
 
@@ -39,5 +47,32 @@ def run(quiet: bool = False):
     return out
 
 
+def run_scaled(processors: int, quiet: bool = False):
+    """Fig-5 data at a scaled P from the committed streamed-grid artifact."""
+    grid = load_grid_artifact(processors)
+    print(f"# Fig 5 at scale: utilization vs task time, P={processors}")
+    print("scheduler,t_s_task,n,measured_U,approx_model_U,exact_model_U")
+    out = {}
+    for fam, data in grid["families"].items():
+        fit = data["fit"]
+        curve = []
+        for r in sorted(data["rows"], key=lambda r: r["t"]):
+            ua = float(utilization_approx(r["t"], fit["t_s"]))
+            ue = float(utilization_constant(r["t"], r["n"], fit["t_s"],
+                                            fit["alpha_s"]))
+            print(f"{fam},{r['t']},{r['n']},{r['utilization']:.4f},"
+                  f"{ua:.4f},{ue:.4f}")
+            curve.append((r["t"], r["n"], r["utilization"], ua, ue))
+        out[fam] = curve
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--P", type=int, default=None,
+                    help="render from the scaled streamed-grid artifact")
+    args = ap.parse_args()
+    if args.P:
+        run_scaled(args.P)
+    else:
+        run()

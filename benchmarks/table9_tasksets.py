@@ -1,19 +1,26 @@
 """Paper Table 9: runtimes of the four constant-time task sets on the four
-schedulers (1408 cores, 3 trials) — plus a scaled grid toward P >= 100k.
+schedulers (1408 cores, 3 trials) — plus scaled grids toward P >= 100k.
 
 Default invocation reproduces the paper's grid exactly (cached in
-experiments/bench_cache.json).  ``--P`` runs a scaled grid at an arbitrary
-processor count and refits the latency model (Delta-T = t_s * n^alpha_s)
-with ``latency_model.fit_power_law``:
+experiments/bench_cache.json).  ``--P`` runs a single-family scaled grid at
+an arbitrary processor count and refits the latency model
+(Delta-T = t_s * n^alpha_s) with ``latency_model.fit_power_law``.  ``--grid``
+runs the *full four-family* Table-9 protocol at that P — all four task sets
+(n in {4, 8, 48, 240}), streamed through the workload subsystem in waves of
+P tasks under an active-job cap, so the n=240 set (24.6M tasks at P=102,400)
+never materializes more than a few waves — and refits per family:
 
     python benchmarks/table9_tasksets.py                     # paper grid
-    python benchmarks/table9_tasksets.py --P 102400 --fit    # 100k-slot grid
+    python benchmarks/table9_tasksets.py --P 102400 --fit    # one family
+    python benchmarks/table9_tasksets.py --P 102400 --grid   # four families
 """
 import argparse
 import json
+import time
 from pathlib import Path
 
-from benchmarks.common import TASK_SETS, all_results, run_taskset
+from benchmarks.common import (
+    SCHEDULERS, STREAM_ACTIVE_JOBS, TASK_SETS, all_results, run_taskset)
 
 EXPERIMENTS = Path(__file__).resolve().parent.parent / "experiments"
 
@@ -59,19 +66,73 @@ def run_scaled(processors: int, family: str = "slurm",
     return out
 
 
+def run_grid(processors: int, families=SCHEDULERS,
+             sets=TASK_SETS, max_active: int = STREAM_ACTIVE_JOBS):
+    """The full four-family Table-9 grid at P processors, streamed.
+
+    Each (family, set) is one streamed run: waves of P tasks, at most
+    ``max_active`` job arrays materialized at a time (the n=240 rapid set is
+    n·P tasks total — 24.6M at P=102,400 — but peak live tasks stay at
+    max_active·P).  Per family, (t_s, alpha_s) is refit over the four
+    measured Delta-T points, the paper's Table-10 protocol at 73x its scale.
+    """
+    from repro.core.latency_model import fit_power_law
+
+    print(f"# Table 9 full grid: P={processors}, streamed "
+          f"(wave=P, max_active={max_active})")
+    print("scheduler,set,t,n,T_total_s,delta_t_s,utilization,wall_s")
+    out = {"bench": "table9_grid", "P": processors,
+           "stream": {"wave_tasks": processors,
+                      "max_active_jobs": max_active},
+           "families": {}}
+    for fam in families:
+        rows = []
+        for name, t, n in sets:
+            w0 = time.time()
+            r = run_taskset(fam, n, t, processors=processors,
+                            wave_tasks=processors,
+                            max_active_jobs=max_active)
+            r["set"] = name
+            r["wall_s"] = round(time.time() - w0, 1)
+            print(f"{fam},{name},{t},{n},{r['T_total']:.1f},"
+                  f"{r['delta_t']:.2f},{r['utilization']:.4f},"
+                  f"{r['wall_s']}", flush=True)
+            rows.append(r)
+        model = fit_power_law([r["n"] for r in rows],
+                              [r["delta_t"] for r in rows])
+        print(f"{fam} fit: {model}", flush=True)
+        out["families"][fam] = {
+            "rows": rows,
+            "fit": {"t_s": model.t_s, "alpha_s": model.alpha_s,
+                    "r2": model.r2},
+        }
+    EXPERIMENTS.mkdir(parents=True, exist_ok=True)
+    path = EXPERIMENTS / f"table9_grid_P{processors}.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"-> {path}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--P", type=int, default=None,
                     help="run the scaled grid at this processor count "
                          "(default: the paper's P=1408 full grid)")
+    ap.add_argument("--grid", action="store_true",
+                    help="with --P: the full four-family, four-set grid "
+                         "(streamed waves) instead of one family")
     ap.add_argument("--family", default="slurm",
                     help="scheduler family for the scaled grid")
     ap.add_argument("--n-values", type=int, nargs="+", default=(1, 2, 4, 8),
                     help="tasks/processor points for the scaled grid")
+    ap.add_argument("--max-active", type=int, default=STREAM_ACTIVE_JOBS,
+                    help="streaming active-job cap for --grid")
     ap.add_argument("--no-fit", dest="fit", action="store_false",
                     help="skip the (t_s, alpha_s) refit of the scaled runs")
     args = ap.parse_args()
-    if args.P:
+    if args.P and args.grid:
+        run_grid(args.P, max_active=args.max_active)
+    elif args.P:
         run_scaled(args.P, family=args.family, n_values=tuple(args.n_values),
                    fit=args.fit)
     else:

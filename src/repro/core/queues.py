@@ -89,6 +89,7 @@ class JobQueue:
         self._seq = itertools.count()
         self._ledger_version = 0
         self._rekey_now: Optional[float] = None
+        self._dead = 0                       # lazily-deleted entries in _heap
 
     # compatibility view: the seed exposed a plain list
     @property
@@ -109,7 +110,18 @@ class JobQueue:
 
     def remove(self, job: Job) -> None:
         # heap entry dies lazily; membership is the source of truth
-        self._members.pop(job.job_id, None)
+        if self._members.pop(job.job_id, None) is not None:
+            self._dead += 1
+            # FIFO fast-path runs fetch through the QueueManager's global
+            # heap and never pop this one, so without compaction a streamed
+            # run would retain every retired job's task graph here. Filtering
+            # keeps each live entry's original key: identical lazy-deletion
+            # semantics, amortized O(1) per removal.
+            if self._dead > 16 and self._dead > len(self._members):
+                self._heap = [e for e in self._heap
+                              if self._members.get(e[2].job_id) is e[2]]
+                heapq.heapify(self._heap)
+                self._dead = 0
 
     def __contains__(self, job: Job) -> bool:
         return self._members.get(job.job_id) is job
@@ -141,6 +153,8 @@ class JobQueue:
             _, _, job = self._heap[0]
             if self._members.get(job.job_id) is not job:
                 heapq.heappop(self._heap)       # lazily drop removed jobs
+                if self._dead > 0:
+                    self._dead -= 1
                 continue
             return job
         return None
@@ -151,6 +165,7 @@ class JobQueue:
         self._heap = [(self.effective_key(j, now), i, j)
                       for i, j in enumerate(self._members.values())]
         heapq.heapify(self._heap)
+        self._dead = 0
 
     def over_limit(self, extra_slots: int) -> bool:
         return (self.config.max_slots > 0
@@ -182,6 +197,7 @@ class QueueManager:
         self.jobs: Dict[int, Job] = {}
         self._finished: Dict[int, JobState] = {}
         self._order_heap: List[Tuple[Tuple[float, float, int], int, Job]] = []
+        self._order_dead = 0                 # dequeued entries still in heap
         self._seq = itertools.count()
         self._queued: Set[int] = set()       # job ids currently in some queue
         self._exhausted: Set[int] = set()    # ids with no unfetched tasks
@@ -234,8 +250,19 @@ class QueueManager:
         q = self.queues.get(job.queue)
         if q is not None:
             q.remove(job)
-        if was_queued and self._ordered is not None:
-            self._ordered_dead += 1      # entry dies lazily
+        if was_queued:
+            if self._ordered is not None:
+                self._ordered_dead += 1  # entry dies lazily
+            # policy-path runs fetch through iter_queued and never pop this
+            # heap, so dead entries (each pinning a Job/Task graph) must be
+            # compacted here or a streamed run retains the whole trace
+            self._order_dead += 1
+            if (self._order_dead > 16
+                    and self._order_dead > len(self._queued)):
+                self._order_heap = [e for e in self._order_heap
+                                    if e[2].job_id in self._queued]
+                heapq.heapify(self._order_heap)
+                self._order_dead = 0
         return was_queued
 
     def job_finished(self, job: Job, state: JobState, now: float) -> List[Job]:
@@ -249,6 +276,11 @@ class QueueManager:
         job.state = state
         job.end_time = now
         self.dequeue(job)
+        # the registry holds live jobs only: a retired job's entry (and with
+        # it the Job/Task graph) must be collectible, or a million-job
+        # streamed run retains every task ever submitted. Terminal state
+        # survives in _finished (ids only) for dependency gating.
+        self.jobs.pop(job.job_id, None)
         released: List[Job] = []
         waiters = self._dependents.pop(job.job_id, ())
         if state is JobState.COMPLETED:
@@ -278,7 +310,12 @@ class QueueManager:
         h = self._order_heap
         while h:
             _, _, job = h[0]
-            if job.job_id not in self._queued or job.job_id in self._exhausted:
+            if job.job_id not in self._queued:
+                heapq.heappop(h)
+                if self._order_dead > 0:
+                    self._order_dead -= 1
+                continue
+            if job.job_id in self._exhausted:
                 heapq.heappop(h)
                 continue
             return job

@@ -112,6 +112,10 @@ class Scheduler:
         self._pending = 0
         self._pending_zero = 0
         self._job_pending: Dict[int, int] = {}
+        # observation hooks (workload injector / metrics tap): None-checked on
+        # the hot path so unobserved runs pay one comparison per event
+        self.on_dispatch: Optional[Callable[[Task, int], None]] = None
+        self.on_job_done: Optional[Callable[[Job], None]] = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
 
@@ -335,6 +339,8 @@ class Scheduler:
         task.start_time = start
         task.state = TaskState.RUNNING
         self._running_tasks[task.key] = task
+        if self.on_dispatch is not None:
+            self.on_dispatch(task, queue_depth)
         if self.executor is not None and task.payload is not None:
             self.loop.at(start, self._run_payload, task)
         else:
@@ -418,7 +424,10 @@ class Scheduler:
             self._count_in(dep)
         if not self._unit.pop(job.job_id, True):
             self._nonunit -= 1
+        self._cursor.pop(job.job_id, None)
         del self._active_jobs[job.job_id]
+        if self.on_job_done is not None:
+            self.on_job_done(job)
 
     def _cancel(self, task: Task) -> None:
         if task.state is TaskState.RUNNING:
@@ -554,6 +563,11 @@ class Scheduler:
     # ------------------------------------------------------------- run
     def run(self, until: float = float("inf")) -> None:
         self.loop.run(until)
+
+    @property
+    def active_jobs(self) -> int:
+        """Jobs submitted and not yet retired (materialized working set)."""
+        return len(self._active_jobs)
 
     # ------------------------------------------------------------ stats
     def utilization(self, job_ids: Optional[List[int]] = None) -> float:

@@ -14,15 +14,25 @@ from typing import Any, Callable, List, Optional, Tuple
 
 
 class EventLoop:
-    """Priority-queue event loop over virtual time."""
+    """Priority-queue event loop over virtual time.
 
-    __slots__ = ("_heap", "_seq", "now", "_running")
+    Arrival sources: a workload source streaming millions of arrivals cannot
+    pre-push them all (the heap would materialize the whole trace).  A source
+    registered with :meth:`add_source` is polled whenever the heap drains; it
+    may push the next batch of events lazily (returning True) or report
+    exhaustion (False).  ``run`` only stops once the heap is empty *and* every
+    source declines to refill it, so O(1)-lookahead injectors keep the loop
+    alive without owning the run loop.
+    """
+
+    __slots__ = ("_heap", "_seq", "now", "_running", "_sources")
 
     def __init__(self):
         self._heap: List[Tuple[float, int, Callable, tuple]] = []
         self._seq = itertools.count()
         self.now = 0.0
         self._running = False
+        self._sources: List[Callable[[], bool]] = []
 
     def at(self, time: float, fn: Callable, *args) -> None:
         if time < self.now:
@@ -32,11 +42,31 @@ class EventLoop:
     def after(self, delay: float, fn: Callable, *args) -> None:
         self.at(self.now + delay, fn, *args)
 
+    def add_source(self, refill: Callable[[], bool]) -> None:
+        """Register a lazy arrival source, polled when the heap drains."""
+        self._sources.append(refill)
+
+    def remove_source(self, refill: Callable[[], bool]) -> None:
+        try:
+            self._sources.remove(refill)
+        except ValueError:
+            pass
+
+    def _refill(self) -> bool:
+        """Give every source a chance to push events; True if any did."""
+        added = False
+        for src in list(self._sources):
+            if src():
+                added = True
+        return added and bool(self._heap)
+
     def run(self, until: float = float("inf"), max_events: int = 0) -> int:
         """Process events; returns number processed."""
         n = 0
         self._running = True
-        while self._heap and self._running:
+        while self._running:
+            if not self._heap and not (self._sources and self._refill()):
+                break
             time, _, fn, args = self._heap[0]
             if time > until:
                 break

@@ -115,6 +115,14 @@ class ServingEngine:
             tok = int(next_tok[0])
             req.output.append(tok)
             req.first_token_time = time.time()
+            if req.done:
+                # generation stops at the step that produces EOS — when the
+                # prefill token is already terminal (EOS, or
+                # max_new_tokens == 1), activating the lane would burn a
+                # decode dispatch and emit one extra post-EOS token
+                req.done_time = time.time()
+                self.rm.release(self._lane_jobs.pop(lane))
+                continue
             self.positions[lane] = len(req.prompt)
             self.lane_req[lane] = req
             self.active_mask[lane] = True

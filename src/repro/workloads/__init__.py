@@ -1,0 +1,26 @@
+"""Workload subsystem: trace-driven + synthetic job sources, streamed into
+the virtual-clock engine at million-task scale (paper's measurement method:
+drive the scheduler with a parameterized workload, fit ΔT = t_s·n^α_s)."""
+from repro.workloads.injector import StreamingInjector
+from repro.workloads.metrics import MetricsTap, Reservoir, TimeSeries
+from repro.workloads.spec import JobSpec, materialize, validate_stream
+from repro.workloads.swf import (
+    SWFRecord, jobs_from_swf, parse_swf_line, read_swf, specs_to_swf,
+    write_swf)
+from repro.workloads.synthetic import (
+    FAMILIES as SYNTHETIC_FAMILIES, TASKSET_PARAMS, bursty_arrivals,
+    constant_durations, constant_taskset, diurnal_arrivals,
+    lognormal_durations, map_reduce_stream, mixed_shapes, pareto_durations,
+    poisson_arrivals, synthetic_stream, zero_slot_shape)
+
+__all__ = [
+    "StreamingInjector", "MetricsTap", "Reservoir", "TimeSeries",
+    "JobSpec", "materialize", "validate_stream",
+    "SWFRecord", "jobs_from_swf", "parse_swf_line", "read_swf",
+    "specs_to_swf", "write_swf",
+    "SYNTHETIC_FAMILIES", "TASKSET_PARAMS", "bursty_arrivals",
+    "constant_durations", "constant_taskset", "diurnal_arrivals",
+    "lognormal_durations", "map_reduce_stream", "mixed_shapes",
+    "pareto_durations", "poisson_arrivals", "synthetic_stream",
+    "zero_slot_shape",
+]

@@ -1,0 +1,130 @@
+"""Metrics tap: per-dispatch latency, queue depth, utilization time series.
+
+One tap serves every benchmark: it attaches to the scheduler's observation
+hooks (``on_dispatch`` / ``on_job_done``) and keeps bounded state however
+long the run is — scalar accumulators, a fixed-size reservoir for latency
+percentiles, and a stride-doubling time series (when the buffer fills, every
+other point is dropped and the sampling stride doubles), so a 100M-dispatch
+run costs the same memory as a 10k one.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.job import Job, Task
+from repro.core.scheduler import Scheduler
+
+
+class Reservoir:
+    """Vitter's algorithm R over a float stream; exact below ``size``."""
+
+    def __init__(self, size: int = 4096, seed: int = 0):
+        self.size = size
+        self.seen = 0
+        self._rng = random.Random(seed)
+        self._buf: List[float] = []
+
+    def add(self, x: float) -> None:
+        self.seen += 1
+        if len(self._buf) < self.size:
+            self._buf.append(x)
+        else:
+            j = self._rng.randrange(self.seen)
+            if j < self.size:
+                self._buf[j] = x
+
+    def percentile(self, q: float) -> float:
+        if not self._buf:
+            return 0.0
+        s = sorted(self._buf)
+        idx = min(int(q / 100.0 * len(s)), len(s) - 1)
+        return s[idx]
+
+
+class TimeSeries:
+    """(t, value) series with a hard point cap via stride doubling."""
+
+    def __init__(self, max_points: int = 2048):
+        self.max_points = max_points
+        self.stride = 1
+        self._count = 0
+        self.points: List[Tuple[float, float]] = []
+
+    def add(self, t: float, v: float) -> None:
+        self._count += 1
+        if self._count % self.stride:
+            return
+        self.points.append((t, v))
+        if len(self.points) >= self.max_points:
+            self.points = self.points[::2]
+            self.stride *= 2
+
+
+class MetricsTap:
+    """Attach to a Scheduler; read summary() at the end of the run.
+
+    Dispatch latency is the paper's quantity: scheduler-time at resource
+    commitment minus task submit time (virtual seconds).  Queue depth and
+    slot utilization are sampled on every dispatch/retire event through the
+    stride-doubling series.
+    """
+
+    def __init__(self, *, reservoir: int = 4096, max_points: int = 2048):
+        self.dispatches = 0
+        self.latency_sum = 0.0
+        self.latency_max = 0.0
+        self._lat = Reservoir(reservoir)
+        self.depth_series = TimeSeries(max_points)
+        self.util_series = TimeSeries(max_points)
+        self.jobs_done = 0
+        self._sch: Optional[Scheduler] = None
+        self._chain_dispatch = None
+        self._chain_done = None
+
+    def attach(self, sch: Scheduler) -> "MetricsTap":
+        self._sch = sch
+        self._chain_dispatch = sch.on_dispatch
+        self._chain_done = sch.on_job_done
+        sch.on_dispatch = self._on_dispatch
+        sch.on_job_done = self._on_job_done
+        return self
+
+    # ------------------------------------------------------------ hooks
+    def _on_dispatch(self, task: Task, queue_depth: int) -> None:
+        sch = self._sch
+        lat = max(task.dispatch_time - task.submit_time, 0.0)
+        self.dispatches += 1
+        self.latency_sum += lat
+        if lat > self.latency_max:
+            self.latency_max = lat
+        self._lat.add(lat)
+        now = sch.loop.now
+        self.depth_series.add(now, float(queue_depth))
+        total = sch.rm.total_slots()
+        if total:
+            self.util_series.add(
+                now, 1.0 - sch.rm.free_slots() / total)
+        if self._chain_dispatch is not None:
+            self._chain_dispatch(task, queue_depth)
+
+    def _on_job_done(self, job: Job) -> None:
+        self.jobs_done += 1
+        if self._chain_done is not None:
+            self._chain_done(job)
+
+    # ---------------------------------------------------------- summary
+    def summary(self) -> Dict:
+        n = max(self.dispatches, 1)
+        return {
+            "dispatches": self.dispatches,
+            "jobs_done": self.jobs_done,
+            "dispatch_latency_mean_s": self.latency_sum / n,
+            "dispatch_latency_p50_s": self._lat.percentile(50),
+            "dispatch_latency_p99_s": self._lat.percentile(99),
+            "dispatch_latency_max_s": self.latency_max,
+            # full stride-doubled series (bounded by max_points): the whole
+            # run's shape, not a tail slice
+            "queue_depth_series": list(self.depth_series.points),
+            "utilization_series": list(self.util_series.points),
+        }

@@ -60,9 +60,27 @@ def test_eos_stops_early(setup):
     rng = np.random.default_rng(5)
     prompt = list(rng.integers(0, cfg.vocab_size, 6))
     ref = _greedy_ref(model, params, prompt, 8, 32)
-    eos = ref[2]
+    # EOS must be a token value that does not occur earlier in the stream:
+    # the smoke model's greedy rollout can repeat its first tokens, and a
+    # repeated value would stop generation at its first occurrence, not at
+    # the index it was picked from
+    k = next(i for i in range(1, len(ref)) if ref[i] not in ref[:i])
+    eos = ref[k]
     eng = ServingEngine(cfg, params, lanes=1, max_len=32)
     req = ServeRequest(prompt=prompt, max_new_tokens=8, eos_token=eos)
     eng.run([req])
+    assert req.output == ref[:k + 1]   # stopped at the producing step
     assert req.output[-1] == eos
-    assert len(req.output) == 3
+    assert len(req.output) == k + 1
+
+
+def test_eos_at_prefill_emits_no_extra_token(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+    prompt = list(rng.integers(0, cfg.vocab_size, 6))
+    ref = _greedy_ref(model, params, prompt, 1, 32)
+    eng = ServingEngine(cfg, params, lanes=1, max_len=32)
+    req = ServeRequest(prompt=prompt, max_new_tokens=8, eos_token=ref[0])
+    stats = eng.run([req])
+    assert req.output == [ref[0]]      # EOS from prefill ends the request
+    assert stats["decode_steps"] == 0  # no post-EOS decode dispatch
