@@ -35,7 +35,7 @@ class TaskState(enum.Enum):
     CANCELLED = "cancelled"
 
 
-@dataclass
+@dataclass(slots=True)
 class ResourceRequest:
     """Per-task resource request (static + consumable resources, §3.2.4)."""
 
@@ -46,7 +46,19 @@ class ResourceRequest:
     node_attrs: Dict[str, Any] = field(default_factory=dict)  # constraints
 
 
-@dataclass
+# lifecycle fields a fresh Task leaves unset until the engine first writes
+# them (construction is on the submit hot path at millions of tasks; five
+# untouched slot stores per task are measurable)
+_TASK_LAZY = {
+    "node_id": None,
+    "submit_time": 0.0,
+    "dispatch_time": 0.0,
+    "start_time": 0.0,
+    "end_time": 0.0,
+}
+
+
+@dataclass(slots=True, init=False)
 class Task:
     job_id: int
     index: int
@@ -62,6 +74,42 @@ class Task:
     attempts: int = 0
     speculative_of: Optional[int] = None  # straggler-mitigation clone
 
+    def __init__(self, job_id: int, index: int, duration: float = 0.0,
+                 payload: Optional[Callable] = None,
+                 request: Optional[ResourceRequest] = None,
+                 state: TaskState = TaskState.WAITING,
+                 node_id: Optional[int] = None, submit_time: float = 0.0,
+                 dispatch_time: float = 0.0, start_time: float = 0.0,
+                 end_time: float = 0.0, attempts: int = 0,
+                 speculative_of: Optional[int] = None):
+        self.job_id = job_id
+        self.index = index
+        self.duration = duration
+        self.payload = payload
+        self.request = ResourceRequest() if request is None else request
+        self.state = state
+        self.attempts = attempts
+        self.speculative_of = speculative_of
+        # lifecycle fields stay unset (see _TASK_LAZY / __getattr__) unless
+        # a non-default value is passed explicitly
+        if node_id is not None:
+            self.node_id = node_id
+        if submit_time:
+            self.submit_time = submit_time
+        if dispatch_time:
+            self.dispatch_time = dispatch_time
+        if start_time:
+            self.start_time = start_time
+        if end_time:
+            self.end_time = end_time
+
+    def __getattr__(self, name):
+        # only reached on unset slots: lazy lifecycle defaults
+        try:
+            return _TASK_LAZY[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
     @property
     def key(self) -> Tuple[int, int]:
         return (self.job_id, self.index)
@@ -70,7 +118,7 @@ class Task:
 _job_ids = itertools.count(1)
 
 
-@dataclass
+@dataclass(slots=True)
 class Job:
     """A job: one task, an array of independent tasks, or a gang-parallel job."""
 
@@ -97,14 +145,25 @@ class Job:
               request: Optional[ResourceRequest] = None,
               durations: Optional[Sequence[float]] = None,
               **kw) -> "Job":
-        """A job array of n independent tasks."""
+        """A job array of n independent tasks.
+
+        All tasks share one request object (requests are read-only in the
+        engine): array construction stays O(n) small allocations and the
+        scheduler's unit-job check collapses to identity comparisons.
+        """
         job = cls(**kw)
-        for i in range(n_tasks):
-            job.tasks.append(Task(
-                job_id=job.job_id, index=i,
-                duration=durations[i] if durations is not None else duration,
-                payload=payloads[i] if payloads is not None else None,
-                request=request or ResourceRequest()))
+        req = request or ResourceRequest()
+        jid = job.job_id
+        if durations is None and payloads is None:
+            job.tasks = [Task(jid, i, duration, None, req)
+                         for i in range(n_tasks)]
+        else:
+            job.tasks = [
+                Task(jid, i,
+                     durations[i] if durations is not None else duration,
+                     payloads[i] if payloads is not None else None,
+                     req)
+                for i in range(n_tasks)]
         return job
 
     @classmethod
@@ -133,7 +192,7 @@ class Job:
                 if t.state in (TaskState.WAITING, TaskState.PREEMPTED)]
 
 
-@dataclass
+@dataclass(slots=True)
 class JobStats:
     """Per-job accounting recorded by job-lifecycle management."""
 

@@ -31,7 +31,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.job import Job, JobState
+from repro.core.job import Job, JobState, Task, TaskState
 
 
 @dataclass
@@ -78,7 +78,15 @@ class FairShareLedger:
 
 
 class JobQueue:
-    """A named queue backed by a lazy-deletion heap on effective priority."""
+    """A named queue backed by a lazy-deletion heap on effective priority.
+
+    The heap itself is built lazily on the first per-queue fetch: the
+    scheduler's FIFO fast path fetches through the QueueManager's global
+    dispatch-order heap and never touches it, so pure fast-path runs skip
+    the per-push effective-key/heappush work entirely (the many-short-jobs
+    regime submits and retires thousands of queues' worth of jobs without
+    ever needing a per-queue priority view).
+    """
 
     def __init__(self, config: Optional[QueueConfig] = None):
         self.config = config or QueueConfig()
@@ -86,6 +94,7 @@ class JobQueue:
         self.slots_in_use = 0
         self._members: Dict[int, Job] = {}   # job_id -> Job, insertion order
         self._heap: List[Tuple[Tuple[float, float, int], int, Job]] = []
+        self._heap_live = False              # built on first next_eligible
         self._seq = itertools.count()
         self._ledger_version = 0
         self._rekey_now: Optional[float] = None
@@ -105,18 +114,18 @@ class JobQueue:
     def push(self, job: Job, now: float = 0.0) -> None:
         job.state = JobState.QUEUED
         self._members[job.job_id] = job
-        heapq.heappush(
-            self._heap, (self.effective_key(job, now), next(self._seq), job))
+        if self._heap_live:
+            heapq.heappush(
+                self._heap, (self.effective_key(job, now), next(self._seq), job))
 
     def remove(self, job: Job) -> None:
         # heap entry dies lazily; membership is the source of truth
-        if self._members.pop(job.job_id, None) is not None:
+        if (self._members.pop(job.job_id, None) is not None
+                and self._heap_live):
             self._dead += 1
-            # FIFO fast-path runs fetch through the QueueManager's global
-            # heap and never pop this one, so without compaction a streamed
-            # run would retain every retired job's task graph here. Filtering
-            # keeps each live entry's original key: identical lazy-deletion
-            # semantics, amortized O(1) per removal.
+            # compaction keeps each live entry's original key: identical
+            # lazy-deletion semantics, amortized O(1) per removal, and a
+            # retired job's task graph never stays pinned here.
             if self._dead > 16 and self._dead > len(self._members):
                 self._heap = [e for e in self._heap
                               if self._members.get(e[2].job_id) is e[2]]
@@ -145,7 +154,10 @@ class JobQueue:
         different timestamps is not order-safe. Still cheaper than the
         seed's O(J log J) sort per fetch, and exact: matches ``ordered()``.
         """
-        if (self.config.fair_share and self.ledger.usage
+        if not self._heap_live:
+            self._heap_live = True
+            self._rekey(now)
+        elif (self.config.fair_share and self.ledger.usage
                 and (self.ledger.version != self._ledger_version
                      or self._rekey_now != now)):
             self._rekey(now)
@@ -213,11 +225,21 @@ class QueueManager:
         self.queues[config.name] = JobQueue(config)
 
     # ------------------------------------------------------------ submit
-    def submit(self, job: Job, now: float) -> None:
+    def submit(self, job: Job, now: float, stamp_tasks: bool = True) -> None:
+        """Register and (if eligible) enqueue ``job``.
+
+        ``stamp_tasks=False`` skips the per-task submit-time stamping for
+        callers that already stamped during their own admission walk (the
+        scheduler fuses it with its unit/pending-count pass).
+        """
         job.submit_time = now
-        for t in job.tasks:
-            t.submit_time = now
+        if stamp_tasks:
+            for t in job.tasks:
+                t.submit_time = now
         self.jobs[job.job_id] = job
+        if not job.depends_on:           # hot path: no dependency gating
+            self._enqueue(job, now)
+            return
         unmet = {d for d in job.depends_on
                  if self._finished.get(d) is not JobState.COMPLETED}
         if not unmet:
@@ -229,7 +251,10 @@ class QueueManager:
                 self._dependents.setdefault(d, []).append(job)
 
     def _enqueue(self, job: Job, now: float) -> None:
-        self.queues.setdefault(job.queue, JobQueue()).push(job, now)
+        q = self.queues.get(job.queue)
+        if q is None:                    # setdefault would build (and drop)
+            q = self.queues[job.queue] = JobQueue()  # a JobQueue per call
+        q.push(job, now)
         self._queued.add(job.job_id)
         heapq.heappush(self._order_heap,
                        (_global_key(job), next(self._seq), job))
@@ -323,6 +348,73 @@ class QueueManager:
 
     def mark_exhausted(self, job_id: int) -> None:
         self._exhausted.add(job_id)
+
+    def take_waiting(self, cursor: Dict[int, int], k: int
+                     ) -> Tuple[List[Task], List[Tuple[Job, int]],
+                                Optional[List[int]], int]:
+        """Bulk task fetch for the wave path: up to ``k`` WAITING tasks.
+
+        Walks eligible jobs in dispatch order, advancing the scheduler's
+        per-job ``cursor`` over each job's task list in contiguous slices —
+        one list-extend per (job, run) instead of one full fetch cycle per
+        task.  Returns ``(tasks, groups, skips, consumed)``:
+
+        * ``groups`` — ``(job, count)`` runs, in task order, so the caller
+          does per-job bookkeeping (state transition, pending counters)
+          once per run instead of once per task;
+        * ``skips`` — per-task count of non-WAITING cursor entries consumed
+          before that task (``None`` when there were none): the latency
+          model charges a queue depth that such entries decrement, so the
+          closed-form depth recurrence needs them;
+        * ``consumed`` — total cursor advancement (tasks + skipped entries),
+          i.e. the caller's queue-depth decrement.
+
+        Equivalent, task for task, to repeated single fetches through
+        ``next_eligible()`` + cursor walk (the per-event path's loop).
+        """
+        tasks: List[Task] = []
+        groups: List[Tuple[Job, int]] = []
+        skips: Optional[List[int]] = None
+        extra = 0
+        consumed = 0
+        WAITING = TaskState.WAITING
+        while len(tasks) < k:
+            job = self.next_eligible()
+            if job is None:
+                break
+            jid = job.job_id
+            cur = cursor.get(jid, 0)
+            jt = job.tasks
+            n = len(jt)
+            if cur >= n:
+                self.mark_exhausted(jid)   # requeues bypass this path
+                continue
+            take = k - len(tasks)
+            if take > n - cur:
+                take = n - cur
+            seg = jt[cur:cur + take]
+            got = take
+            for j, t in enumerate(seg):
+                if t.state is not WAITING:
+                    got = j
+                    break
+            if got:
+                tasks.extend(seg if got == take else seg[:got])
+                groups.append((job, got))
+                if skips is not None:
+                    skips.extend([extra] * got)
+                consumed += got
+                cur += got
+            if got < take:
+                # a non-WAITING entry: consume it (depth decrements) and
+                # keep walking, exactly like the per-event cursor loop
+                if skips is None:
+                    skips = [0] * len(tasks)
+                extra += 1
+                consumed += 1
+                cur += 1
+            cursor[jid] = cur
+        return tasks, groups, skips, consumed
 
     def _refresh_ordered(self) -> None:
         """Build the snapshot on first use; compact once dead entries

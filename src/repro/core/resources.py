@@ -162,7 +162,7 @@ class NodeState(enum.Enum):
     DRAINED = "drained"    # no new work (maintenance / elastic shrink)
 
 
-@dataclass
+@dataclass(slots=True)
 class Node:
     node_id: int
     slots: int = 1
@@ -227,6 +227,12 @@ class ResourceManager:
         self._free_slots = 0
         self._total_slots = 0
         self.index = CapacityIndex()       # capacity-bucketed node index
+        # wave-path lazy index upkeep: unit-slot bulk allocate/release only
+        # touch Node counters and enqueue the node id here; sync_index()
+        # reconciles the capacity index / free-id set before any index
+        # consumer (free_nodes, first_fit, candidates, the policy cycle)
+        # reads it — O(nodes touched since last sync), not O(nodes)
+        self._index_dirty: Set[int] = set()
 
     # ---------------------------------------------------- aggregate upkeep
     def _join_up(self, node: Node) -> None:
@@ -355,6 +361,84 @@ class ResourceManager:
                     self._free_ids.add(node.node_id)
                     self._free_cache = None
 
+    # ------------------------------------------ wave-path bulk allocation
+    def allocate_unit_wave(self, tasks: List[Task], node_ids: List[int],
+                           wnodes: Optional[List[Node]] = None
+                           ) -> List[Tuple[int, int]]:
+        """Bulk unit-slot allocation (the scheduler's dispatch wave).
+
+        The caller guarantees every task requests exactly one slot with no
+        constraints/consumables; when ``wnodes`` (the per-slot Node objects,
+        from the scheduler's validation scan) is given, the slots were
+        already claimed (``free_slots`` decremented) during validation.
+        Capacity-index / free-node-cache upkeep is deferred to
+        :meth:`sync_index`.  Returns the per-task ``(job_id, index)`` keys
+        so the wave's later phases (running-task index, coalesced
+        completion) reuse them instead of rebuilding.
+        """
+        nodes = self.nodes
+        claimed = wnodes is not None
+        if not claimed:
+            wnodes = [nodes[nid] for nid in node_ids]
+        keys: List[Tuple[int, int]] = []
+        kapp = keys.append
+        for task, nid, node in zip(tasks, node_ids, wnodes):
+            if not claimed:
+                node.free_slots -= 1
+            k = (task.job_id, task.index)
+            node.running.add(k)
+            task.node_id = nid
+            kapp(k)
+        self._index_dirty.update(node_ids)
+        self._free_slots -= len(tasks)
+        return keys
+
+    def release_unit(self, task: Task) -> None:
+        """Unit-slot release (wave completion fast path); lazy index upkeep.
+
+        Exactly :meth:`release` for a one-slot, no-consumables task: a task
+        whose node already forgot it (node failure reset) is a no-op.
+        This is the tested reference form of the release that
+        ``Scheduler._finish_wave`` inlines per drained member — change the
+        two together (tests/test_wavepath.py pins this one).
+        """
+        node = self.nodes.get(task.node_id)
+        if node is None:
+            return
+        key = (task.job_id, task.index)
+        running = node.running
+        if key not in running:
+            return
+        running.discard(key)
+        node.free_slots += 1
+        if node.state is NodeState.UP:
+            self._free_slots += 1
+            self._index_dirty.add(node.node_id)
+
+    def sync_index(self) -> None:
+        """Reconcile deferred wave-path updates into the capacity index.
+
+        Every index consumer calls this first; between consumers the wave
+        hot path pays one ``set.add`` per event instead of a segment-tree
+        walk per allocate and per release.
+        """
+        dirty = self._index_dirty
+        if not dirty:
+            return
+        nodes = self.nodes
+        index = self.index
+        free_ids = self._free_ids
+        for nid in dirty:
+            node = nodes[nid]
+            c = node.free_slots if node.state is NodeState.UP else 0
+            index.set_free(nid, c)
+            if c > 0 and node.state is NodeState.UP:
+                free_ids.add(nid)
+            else:
+                free_ids.discard(nid)
+        dirty.clear()
+        self._free_cache = None
+
     # --------------------------------------------------------- queries
     def up_nodes(self) -> List[Node]:
         if self._up_cache is None:
@@ -366,6 +450,8 @@ class ResourceManager:
 
         Cached between membership changes, like ``up_nodes()``.
         """
+        if self._index_dirty:
+            self.sync_index()
         if self._free_cache is None:
             self._free_cache = [self.nodes[i] for i in sorted(self._free_ids)]
         return self._free_cache
@@ -377,6 +463,8 @@ class ResourceManager:
         return self._total_slots
 
     def candidates(self, req: ResourceRequest) -> List[Node]:
+        if self._index_dirty:
+            self.sync_index()
         if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
             return []
         if req.slots > 0:    # index only tracks nodes with spare slots
@@ -388,6 +476,8 @@ class ResourceManager:
         O(log nodes) tree descents instead of a free-list scan (and no
         ``free_nodes()`` cache rebuild churn when allocations saturate
         nodes mid-walk, as gang trial allocation does)."""
+        if self._index_dirty:
+            self.sync_index()
         if any(self.licenses.get(l, 0) <= 0 for l in req.licenses):
             return None
         if req.slots <= 0:

@@ -33,6 +33,11 @@ import statistics
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+try:                                   # closed-form wave math (large waves)
+    import numpy as _np
+except ImportError:                    # pure-Python recurrence still exact
+    _np = None
+
 from repro.core.families import INPROC, LatencyProfile
 from repro.core.job import Job, JobState, JobStats, Task, TaskState
 from repro.core.policies import FIFOPolicy, Policy
@@ -48,6 +53,11 @@ class SchedulerConfig:
     preemption: bool = False
     heartbeat_interval: float = 0.0    # 0 = disabled (sim drives failures)
     max_dispatch_per_cycle: int = 0    # 0 = unlimited
+    # wave batching: dispatch whole free-capacity waves with a closed-form
+    # serial-clock recurrence and coalesced completion batches.  Observably
+    # identical to the per-event path (tests/test_wavepath.py); turn off to
+    # force per-event processing (differential testing, debugging)
+    wave_batching: bool = True
 
 
 def _unit_request(r) -> bool:
@@ -75,6 +85,29 @@ def _is_unit(job: Job) -> bool:
     return True
 
 
+class _Wave:
+    """A dispatched wave's coalesced completion batch.
+
+    Parallel lists sorted by end time; ``pos`` is the drain cursor and
+    ``seq`` the event-loop tie-break sequence reserved at dispatch time
+    (shared by all members — per-event completion events would have held
+    consecutive sequences with nothing in between, so one number preserves
+    every ordering comparison against foreign events).
+    """
+
+    __slots__ = ("tasks", "ends", "atts", "keys", "nodes", "pos", "seq")
+
+    def __init__(self, tasks: List[Task], ends: List[float], atts: List[int],
+                 keys: List[Tuple[int, int]], nodes: List, seq: int):
+        self.tasks = tasks
+        self.ends = ends
+        self.atts = atts
+        self.keys = keys        # per-task (job_id, index), from allocation
+        self.nodes = nodes      # per-task Node objects, from allocation
+        self.pos = 0
+        self.seq = seq
+
+
 class Scheduler:
     def __init__(self, rm: ResourceManager, policy: Optional[Policy] = None,
                  profile: LatencyProfile = INPROC,
@@ -94,12 +127,21 @@ class Scheduler:
         self.completed = 0
         self._cursor: Dict[int, int] = {}          # job_id -> next task index
         self._requeue: Deque[Task] = collections.deque()
-        self._free_stack: List[int] = []           # fast path: unit-slot nodes
+        self._free_stack: List = []      # fast path: free unit slots, as
+        # Node objects (one entry per spare slot) — entries are validated
+        # lazily against live node state, never eagerly maintained
         self._fast = isinstance(self.policy, FIFOPolicy)
         self._next_cycle: Optional[float] = None
         self._active_jobs: Dict[int, Job] = {}
         self._clones: Dict[Tuple[int, int], Task] = {}
         self._durations: Deque[float] = collections.deque(maxlen=512)
+        # straggler-threshold cache: the median over _durations is
+        # recomputed only when the deque changed since the last check
+        # (satellite of the wave path: _speculate ran statistics.median —
+        # O(window log window) — every cycle even when nothing completed)
+        self._dur_version = 0            # bumped on every _durations append
+        self._med_version = -1
+        self._med_value = 0.0
         # incremental hot-path accounting
         self._depth = 0                  # == seed's recomputed _queue_depth()
         self._nonunit = 0                # active jobs ineligible for fast path
@@ -115,6 +157,13 @@ class Scheduler:
         # observation hooks (workload injector / metrics tap): None-checked on
         # the hot path so unobserved runs pay one comparison per event
         self.on_dispatch: Optional[Callable[[Task, int], None]] = None
+        # batched observer for dispatch waves: called once per wave with
+        # (tasks, queue_depths) after every task's bookkeeping is complete.
+        # A subscriber that sets only on_dispatch forces the engine off the
+        # wave path (the per-task hook observes mid-wave resource state that
+        # a bulk-allocated wave no longer exposes); MetricsTap sets both.
+        self.on_dispatch_batch: Optional[
+            Callable[[List[Task], List[int]], None]] = None
         self.on_job_done: Optional[Callable[[Job], None]] = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
@@ -123,18 +172,42 @@ class Scheduler:
     def submit(self, job: Job) -> None:
         now = self.loop.now
         self.sched_clock = max(self.sched_clock, now) + self.profile.submit_cost
-        self.qm.submit(job, now)
-        self._active_jobs[job.job_id] = job
-        self._cursor[job.job_id] = 0
-        unit = _is_unit(job)
-        self._unit[job.job_id] = unit
+        # one fused admission walk: per-task submit-time stamping (on
+        # behalf of qm.submit), the unit-job check (_is_unit), and the
+        # policy pending counts (_count_in) — identical results, one pass
+        tasks = job.tasks
+        jid = job.job_id
+        n = z = 0
+        if tasks:
+            first = tasks[0].request
+            unit = not job.parallel and _unit_request(first)
+            WAITING = TaskState.WAITING
+            PREEMPTED = TaskState.PREEMPTED
+            for t in tasks:
+                t.submit_time = now
+                r = t.request
+                if unit and r is not first and not _unit_request(r):
+                    unit = False
+                ts = t.state
+                if ts is WAITING or ts is PREEMPTED:
+                    n += 1
+                    if r.slots <= 0:
+                        z += 1
+        else:
+            unit = not job.parallel
+        self.qm.submit(job, now, stamp_tasks=False)
+        self._active_jobs[jid] = job
+        self._cursor[jid] = 0
+        self._unit[jid] = unit
         if not unit:
             self._nonunit += 1
         if job.state is not JobState.PENDING:     # eligible now -> counted
-            self._depth += job.n_tasks
-            self._count_in(job)
-        self.stats[job.job_id] = JobStats(
-            job_id=job.job_id, submit_time=now, n_tasks=job.n_tasks)
+            self._depth += len(tasks)
+            self._pending += n
+            self._pending_zero += z
+            self._job_pending[jid] = n
+        self.stats[jid] = JobStats(
+            job_id=jid, submit_time=now, n_tasks=len(tasks))
         self._request_cycle()
 
     # ------------------------------------------------ pending accounting
@@ -152,7 +225,10 @@ class Scheduler:
 
     def _count_out(self, job: Job) -> None:
         """Drop a retiring job's remaining pending tasks from the counters."""
-        self._pending -= self._job_pending.pop(job.job_id, 0)
+        n = self._job_pending.pop(job.job_id, 0)
+        if n == 0:
+            return      # no pending tasks -> no pending zero-slot tasks
+        self._pending -= n
         for t in job.tasks:
             if (t.state in (TaskState.WAITING, TaskState.PREEMPTED)
                     and t.request.slots <= 0):
@@ -197,15 +273,14 @@ class Scheduler:
     def _rebuild_free_stack(self) -> None:
         self._free_stack = []
         for n in self.rm.free_nodes():
-            self._free_stack.extend([n.node_id] * n.free_slots)
+            self._free_stack.extend([n] * n.free_slots)
 
     def _pop_free_node(self) -> Optional[int]:
         """Pop a validated unit-slot node, discarding stale stack entries."""
         while self._free_stack:
-            nid = self._free_stack.pop()
-            node = self.rm.nodes[nid]
+            node = self._free_stack.pop()
             if node.state is NodeState.UP and node.free_slots > 0:
-                return nid
+                return node.node_id
         return None
 
     def _next_waiting(self) -> Optional[Task]:
@@ -244,13 +319,18 @@ class Scheduler:
     def _cycle_fast(self) -> None:
         if not self._free_stack:
             self._rebuild_free_stack()
+        if (self.config.wave_batching and self.executor is None
+                and not self.config.speculative
+                and (self.on_dispatch is None
+                     or self.on_dispatch_batch is not None)):
+            self._cycle_wave()
+            return
         limit = self.config.max_dispatch_per_cycle or float("inf")
         count = 0
         while self._free_stack and count < limit:
             # validate the node *before* consuming a task so a stale stack
             # entry (node since drained/failed/filled) never drops a task
-            nid = self._free_stack[-1]
-            node = self.rm.nodes[nid]
+            node = self._free_stack[-1]
             if node.state is not NodeState.UP or node.free_slots <= 0:
                 self._free_stack.pop()
                 continue
@@ -260,11 +340,387 @@ class Scheduler:
             self._free_stack.pop()
             # fetching the task already decremented _depth; the latency model
             # charges the depth *including* the task being dispatched
-            self._dispatch(task, nid, self._depth + 1)
+            self._dispatch(task, node.node_id, self._depth + 1)
             count += 1
+
+    # ------------------------------------------------- wave-batched path
+    # In the FIFO/unit regime every dispatch of a cycle happens at the same
+    # virtual instant and differs only in its serial-clock charge, and every
+    # completion is a pure function of (start, duration) until some other
+    # event intervenes.  The wave path exploits both: it takes the whole
+    # free-capacity wave in one bulk fetch + bulk allocation, computes the
+    # serial-clock recurrence  sched_clock += central_cost + queue_coeff *
+    # depth  for the entire wave as a prefix sum (numpy above _WAVE_NUMPY),
+    # and schedules ONE coalesced completion event per wave that finishes
+    # members in end-time order, yielding to the event heap whenever a real
+    # event (cycle, arrival, another wave's batch) would interleave.  The
+    # engine falls back to the per-event path whenever executors,
+    # speculation, non-unit jobs, or per-task dispatch observers are in
+    # play; node failures mid-wave are caught by the same attempt/state
+    # guards the per-event completion events use.  Observable behaviour —
+    # event ordering, every timestamp, every stat — is identical
+    # (tests/test_wavepath.py pins it differentially).
+    _WAVE_NUMPY = 64     # waves at least this long use the numpy prefix sum
+
+    def _take_wave(self, k: int):
+        """Bulk ``_next_waiting``: up to k tasks from the requeue lane then
+        the queue cursor walk.  Returns (tasks, groups, skips) where groups
+        are (job, count) runs and skips is the per-task count of ghost
+        entries consumed before that task (None when there were none) — the
+        queue-depth recurrence must account for them."""
+        tasks: List[Task] = []
+        groups: List[Tuple[Job, int]] = []
+        skips: Optional[List[int]] = None
+        extra = 0
+        consumed = 0
+        rq = self._requeue
+        if rq:
+            active = self._active_jobs
+            while rq and len(tasks) < k:
+                t = rq.popleft()
+                consumed += 1
+                # same ghost filter as _next_waiting: a retired job's failed
+                # original may still sit here WAITING
+                if (t.state in (TaskState.WAITING, TaskState.PREEMPTED)
+                        and t.job_id in active):
+                    if skips is not None:
+                        skips.append(extra)
+                    tasks.append(t)
+                    groups.append((active[t.job_id], 1))
+                else:
+                    if skips is None:
+                        skips = [0] * len(tasks)
+                    extra += 1
+        if len(tasks) < k:
+            qtasks, qgroups, qskips, qconsumed = self.qm.take_waiting(
+                self._cursor, k - len(tasks))
+            consumed += qconsumed
+            if qtasks:
+                if skips is not None or qskips is not None:
+                    if skips is None:
+                        skips = [0] * len(tasks)
+                    if qskips is None:
+                        skips.extend([extra] * len(qtasks))
+                    else:
+                        skips.extend(q + extra for q in qskips)
+                tasks.extend(qtasks)
+                groups.extend(qgroups)
+        self._depth -= consumed
+        return tasks, groups, skips
+
+    def _cycle_wave(self) -> None:
+        rm = self.rm
+        nodes = rm.nodes
+        stack = self._free_stack
+        depth0 = self._depth
+        if depth0 <= 0:
+            return
+        limit = self.config.max_dispatch_per_cycle
+        cap = depth0 if not limit or depth0 < limit else limit
+        # -- validated free slots, in per-event pop order.  The slot is
+        # *claimed* (free_slots decremented) during validation, so duplicate
+        # stale entries for the same node self-invalidate exactly as the
+        # per-event loop's allocate-then-revalidate does; unused claims are
+        # undone below when the task fetch comes up short.
+        avail: List[int] = []
+        avail_nodes: List = []
+        UP = NodeState.UP
+        while stack and len(avail) < cap:
+            node = stack.pop()
+            if node.state is UP and node.free_slots > 0:
+                node.free_slots -= 1
+                avail.append(node.node_id)
+                avail_nodes.append(node)
+            # else: stale entry — discarded, exactly as the per-event loop
+        if not avail:
+            return
+        tasks, groups, skips = self._take_wave(len(avail))
+        m = len(tasks)
+        if m < len(avail):
+            # unused claims undone, slots back in original stack order
+            for node in avail_nodes[m:]:
+                node.free_slots += 1
+            stack.extend(reversed(avail_nodes[m:]))
+            del avail[m:]
+            del avail_nodes[m:]
+        if m == 0:
+            return
+        keys = rm.allocate_unit_wave(tasks, avail, avail_nodes)
+        wnodes = avail_nodes
+        # -- closed-form serial clock + per-task bookkeeping, one fused
+        # loop: the i-th dispatch (0-based) charges depth0 - i - skips[i];
+        # clock_i is the sequential accumulation starting from
+        # max(sched_clock, now).  Both arms reproduce the per-event float
+        # ops exactly (np.cumsum is ufunc-sequential, and the scalar loop
+        # is literally the per-event recurrence).
+        prof = self.profile
+        cc = prof.central_cost
+        qc = prof.queue_coeff
+        su = prof.startup_cost
+        loop = self.loop
+        now = loop.now
+        s = self.sched_clock
+        if now > s:
+            s = now
+        running = self._running_tasks
+        RUNNING = TaskState.RUNNING
+        ends: List[float] = []
+        atts: List[int] = []
+        end_app = ends.append
+        att_app = atts.append
+        observe = self.on_dispatch_batch is not None
+        depths: Optional[List[int]] = [] if observe else None
+        if _np is not None and m >= self._WAVE_NUMPY:
+            d = _np.arange(depth0, depth0 - m, -1, dtype=_np.float64)
+            if skips is not None:
+                d -= _np.asarray(skips, dtype=_np.float64)
+            acc = _np.empty(m + 1)
+            acc[0] = s
+            acc[1:] = cc + qc * d
+            _np.cumsum(acc, out=acc)
+            clock_arr = acc[1:]
+            clocks = clock_arr.tolist()
+            starts = (clock_arr + su).tolist()
+            s = clocks[m - 1]
+            if observe:
+                depths = ([depth0 - i for i in range(m)] if skips is None
+                          else [depth0 - i - skips[i] for i in range(m)])
+            for i, task in enumerate(tasks):
+                task.state = RUNNING
+                task.dispatch_time = clocks[i]
+                st = starts[i]
+                task.start_time = st
+                end_app(st + task.duration)
+                a = task.attempts + 1
+                task.attempts = a
+                att_app(a)
+                running[keys[i]] = task
+        else:
+            dcur = depth0
+            i = 0
+            for task in tasks:
+                dq = dcur if skips is None else dcur - skips[i]
+                s = s + (cc + qc * dq)
+                dcur -= 1
+                task.state = RUNNING
+                task.dispatch_time = s
+                st = s + su
+                task.start_time = st
+                end_app(st + task.duration)
+                a = task.attempts + 1
+                task.attempts = a
+                att_app(a)
+                running[keys[i]] = task
+                i += 1
+                if depths is not None:
+                    depths.append(dq)
+        # -- per-job bookkeeping, once per (job, run)
+        jp = self._job_pending
+        stats = self.stats
+        QUEUED = JobState.QUEUED
+        pos = 0
+        for job, count in groups:
+            if job.state is QUEUED:
+                job.state = JobState.RUNNING
+                st0 = stats[job.job_id]
+                if st0.first_dispatch == 0.0:
+                    st0.first_dispatch = tasks[pos].dispatch_time
+            jid = job.job_id
+            jp[jid] = jp.get(jid, count) - count
+            pos += count
+        self._pending -= m
+        self.dispatched += m
+        self.sched_clock = s
+        if observe:
+            self.on_dispatch_batch(tasks, depths)
+        # -- one coalesced completion event per wave, members in end-time
+        # order (stable: equal ends keep dispatch order, matching the
+        # per-event heap's sequence tie-break)
+        for i in range(1, m):
+            if ends[i] < ends[i - 1]:
+                order = sorted(range(m), key=ends.__getitem__)
+                tasks = [tasks[j] for j in order]
+                ends = [ends[j] for j in order]
+                atts = [atts[j] for j in order]
+                keys = [keys[j] for j in order]
+                wnodes = [wnodes[j] for j in order]
+                break
+        batch = _Wave(tasks, ends, atts, keys, wnodes, loop.reserve_seq())
+        loop.at_seq(ends[0], batch.seq, self._finish_wave, batch)
+
+    def _finish_wave(self, batch: "_Wave") -> None:
+        """Coalesced completion: finish batch members in end-time order,
+        yielding to the heap whenever a real event (cycle, arrival, another
+        wave) would interleave; the remainder is re-pushed at the next
+        member's end time under the batch's original sequence number, so
+        every tie resolves exactly as per-event completion events would."""
+        tasks = batch.tasks
+        ends = batch.ends
+        atts = batch.atts
+        keys = batch.keys
+        wnodes = batch.nodes
+        seq = batch.seq
+        pos = batch.pos
+        n = len(tasks)
+        loop = self.loop
+        heap = loop._heap
+        until = loop.until
+        rm = self.rm
+        dirty = rm._index_dirty
+        free_stack = self._free_stack
+        running = self._running_tasks
+        active = self._active_jobs
+        stats = self.stats
+        prof = self.profile
+        completion_cost = prof.completion_cost
+        cycle_interval = prof.cycle_interval
+        RUNNING = TaskState.RUNNING
+        COMPLETED = TaskState.COMPLETED
+        UP = NodeState.UP
+        if not loop._running:
+            # stop() took effect while this batch was queued; leave it be
+            return
+        # the straggler window only feeds _speculate; waves are only
+        # dispatched with speculation off, so skip it unless the config
+        # flipped mid-flight (then the per-event fallback keeps it warm)
+        durations = self._durations if self.config.speculative else None
+        # deferred scalar state, flushed at yields and around subcalls that
+        # observe it (_retire -> on_job_done may submit; _task_end reads
+        # and advances the clock).  The heap-head yield bound is likewise
+        # hoisted and refreshed only when this loop itself pushes events.
+        s = self.sched_clock
+        ccount = 0                       # completions drained this call
+        freed = 0                        # UP-node slots released
+        last_e = loop.now                # end time of the last member drained
+        if heap:
+            top = heap[0]
+            btime = top[0]
+            bseq = top[1]
+        else:
+            btime = until
+            bseq = seq + 1               # nothing queued: never ties
+        need_cycle = True
+        jid_cache = -1
+        job = None
+        st = None
+        done_at = 0
+        while pos < n:
+            e = ends[pos]
+            if e > btime or (e == btime and seq > bseq):
+                break                    # a real event interleaves: yield
+            if e > until:
+                break
+            task = tasks[pos]
+            att = atts[pos]
+            # stale member: the node failed mid-wave and the task was
+            # requeued/re-dispatched — same guard as _finish_sim/_task_end
+            if task.attempts != att or task.state is not RUNNING:
+                pos += 1
+                last_e = e
+                continue
+            if self._clones:
+                # speculation switched on mid-flight: take the general path.
+                # (_clones empty implies no live clone can be RUNNING: a
+                # clone's registry entry outlives it — resolution either
+                # completes the clone or cancels it, and the state guard
+                # above already filtered cancelled members.)
+                loop.advance(e)
+                self.sched_clock = s
+                rm._free_slots += freed
+                freed = 0
+                self.completed += ccount
+                ccount = 0
+                pos += 1
+                last_e = e
+                self._task_end(task, True)
+                if not loop._running:
+                    break
+                s = self.sched_clock
+                jid_cache = -1
+                need_cycle = True
+                if heap:
+                    top = heap[0]
+                    btime = top[0]
+                    bseq = top[1]
+                continue
+            pos += 1
+            last_e = e
+            key = keys[pos - 1]
+            task.end_time = e
+            task.state = COMPLETED
+            del running[key]
+            # inline rm.release_unit (the per-member hot path)
+            node = wnodes[pos - 1]
+            nrun = node.running
+            if key in nrun:
+                nrun.discard(key)
+                node.free_slots += 1
+                if node.state is UP:
+                    freed += 1
+                    dirty.add(node.node_id)
+            free_stack.append(node)
+            s = (s if s > e else e) + completion_cost
+            ccount += 1
+            if durations is not None:
+                durations.append(max(e - task.start_time, 1e-9))
+                self._dur_version += 1
+            jid = task.job_id
+            if jid != jid_cache:
+                job = active.get(jid)
+                jid_cache = jid
+                if job is None:
+                    continue
+                st = stats[jid]
+                done_at = len(job.tasks) - job.n_clones - job.failed_tasks
+            elif job is None:
+                continue
+            c = job.completed_tasks + 1
+            job.completed_tasks = c
+            st.task_seconds += task.duration
+            if e > st.last_end:
+                st.last_end = e
+            if c >= done_at:
+                loop.advance(e)
+                self.sched_clock = s
+                rm._free_slots += freed
+                freed = 0
+                self.completed += ccount
+                ccount = 0
+                self._retire(job, JobState.COMPLETED if job.failed_tasks == 0
+                             else JobState.FAILED, e)
+                if not loop._running:
+                    break
+                s = self.sched_clock
+                jid_cache = -1
+                need_cycle = True
+                if heap:
+                    top = heap[0]
+                    btime = top[0]
+                    bseq = top[1]
+            if need_cycle:
+                # inline _request_cycle; later members' times only grow, so
+                # once deduped (or scheduled) it stays deduped this drain
+                t = (e if e > s else s) + cycle_interval
+                nc = self._next_cycle
+                if nc is None or nc > t:
+                    self._next_cycle = t
+                    loop.at(t, self._cycle)
+                    top = heap[0]
+                    btime = top[0]
+                    bseq = top[1]
+                need_cycle = False
+        # flush deferred state
+        self.sched_clock = s
+        self.completed += ccount
+        rm._free_slots += freed
+        loop.advance(last_e)
+        batch.pos = pos
+        if pos < n:
+            loop.at_seq(ends[pos], seq, self._finish_wave, batch)
 
     def _cycle_policy(self) -> None:
         self._free_stack = []  # invalidated by generic allocation
+        self.rm.sync_index()   # reconcile any deferred wave-path updates
         now = self.loop.now
         # the latency model charges the seed's recomputed
         # sum(len(j.pending_tasks())) depth, which the incremental counter
@@ -376,10 +832,11 @@ class Scheduler:
         self._running_tasks.pop(task.key, None)
         self.rm.release(task)
         if self._fast and task.request.slots == 1 and task.node_id is not None:
-            self._free_stack.append(task.node_id)
+            self._free_stack.append(self.rm.nodes[task.node_id])
         self.sched_clock = max(self.sched_clock, now) + self.profile.completion_cost
         self.completed += 1
         self._durations.append(max(now - task.start_time, 1e-9))
+        self._dur_version += 1
         job = self._active_jobs.get(task.job_id)
         if job is None:
             return
@@ -435,7 +892,7 @@ class Scheduler:
             self.rm.release(task)
             if self._fast and task.request.slots == 1 \
                     and task.node_id is not None:
-                self._free_stack.append(task.node_id)
+                self._free_stack.append(self.rm.nodes[task.node_id])
         elif task.state in (TaskState.WAITING, TaskState.PREEMPTED):
             job = self._active_jobs.get(task.job_id)
             if job is not None and job.state in (JobState.QUEUED,
@@ -451,9 +908,12 @@ class Scheduler:
     def _node_down(self, node_id: int) -> None:
         """Requeue orphaned tasks of a failed node (job restarting §3.2.7).
 
-        Scans the running-task index, not every task of every job.
+        Scans the running-task index, not every task of every job.  The
+        failed node's free-stack entries are NOT filtered out here: both
+        dispatch paths and _pop_free_node validate entries against live
+        node state before use, so stale entries die lazily — an O(1)
+        failure instead of an O(stack) rebuild per failure.
         """
-        self._free_stack = [n for n in self._free_stack if n != node_id]
         touched: List[Job] = []
         for t in list(self._running_tasks.values()):
             if t.node_id != node_id:
@@ -490,7 +950,7 @@ class Scheduler:
         once the event loop drains."""
         if self._fast:
             node = self.rm.nodes[node_id]
-            self._free_stack.extend([node_id] * node.free_slots)
+            self._free_stack.extend([node] * node.free_slots)
         if self._active_jobs:
             self._request_cycle()
 
@@ -505,7 +965,12 @@ class Scheduler:
         """
         if len(self._durations) < 8 or not self._free_stack:
             return
-        med = statistics.median(self._durations)
+        # amortized median: recompute only when a completion changed the
+        # durations window since the last check
+        if self._med_version != self._dur_version:
+            self._med_value = statistics.median(self._durations)
+            self._med_version = self._dur_version
+        med = self._med_value
         thresh = self.config.speculative_factor * med
         now = self.loop.now
         for t in list(self._running_tasks.values()):

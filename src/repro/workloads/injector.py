@@ -95,31 +95,49 @@ class StreamingInjector:
 
     # ---------------------------------------------------------- arrival
     def _arrive(self, spec: JobSpec) -> None:
-        deps = []
-        for off in spec.depends_on_prev:
-            if not 0 < off <= len(self._recent):
-                raise ValueError(
-                    f"spec {spec.name!r} depends on stream offset {off}; "
-                    "offsets are positive and must fall inside the "
-                    f"injector's {self._recent.maxlen}-job dependency "
-                    "window (raise dep_window)")
-            deps.append(self._recent[-off])
-        job = spec.build(depends_on=tuple(deps))
-        jobs: List[Job]
-        if self.transform is not None:
-            out = self.transform(job)
-            jobs = list(out) if isinstance(out, (list, tuple)) else [out]
-        else:
-            jobs = [job]
-        for j in jobs:
-            self.sch.submit(j)
-            self.submitted_jobs += 1
-            self.submitted_tasks += j.n_tasks
-        # the spec's dependency anchor is the last job it produced
-        self._recent.append(jobs[-1].job_id)
-        if self.sch.active_jobs > self.peak_active_jobs:
-            self.peak_active_jobs = self.sch.active_jobs
-        self._pull()
+        loop = self.sch.loop
+        while True:
+            deps = []
+            for off in spec.depends_on_prev:
+                if not 0 < off <= len(self._recent):
+                    raise ValueError(
+                        f"spec {spec.name!r} depends on stream offset {off}; "
+                        "offsets are positive and must fall inside the "
+                        f"injector's {self._recent.maxlen}-job dependency "
+                        "window (raise dep_window)")
+                deps.append(self._recent[-off])
+            job = spec.build(depends_on=tuple(deps))
+            jobs: List[Job]
+            if self.transform is not None:
+                out = self.transform(job)
+                jobs = list(out) if isinstance(out, (list, tuple)) else [out]
+            else:
+                jobs = [job]
+            for j in jobs:
+                self.sch.submit(j)
+                self.submitted_jobs += 1
+                self.submitted_tasks += j.n_tasks
+            # the spec's dependency anchor is the last job it produced
+            self._recent.append(jobs[-1].job_id)
+            if self.sch.active_jobs > self.peak_active_jobs:
+                self.peak_active_jobs = self.sch.active_jobs
+            self._pull()
+            # coalesce a run of same-instant arrivals into this callback —
+            # one heap event per burst, not per job.  Only when the burst is
+            # up next anyway: a due arrival would otherwise be (re)pushed at
+            # (now, fresh-seq), i.e. run after every already-queued event at
+            # ``now``, so it may only be inlined if no such event is pending
+            # and the active-job cap would not defer it.
+            nxt = self._next
+            if (nxt is None or nxt.arrival > loop.now
+                    or (self.max_active_jobs
+                        and self.sch.active_jobs >= self.max_active_jobs)):
+                break
+            top = loop.peek()
+            if top is not None and top[0] <= loop.now:
+                break
+            spec = nxt
+            self._next = None
         self._schedule_next()
 
     def _on_job_done(self, job: Job) -> None:

@@ -80,13 +80,24 @@ class MetricsTap:
         self.jobs_done = 0
         self._sch: Optional[Scheduler] = None
         self._chain_dispatch = None
+        self._chain_dispatch_batch = None
         self._chain_done = None
+        self._bound_dispatch = None
+        self._bound_batch = None
 
     def attach(self, sch: Scheduler) -> "MetricsTap":
         self._sch = sch
         self._chain_dispatch = sch.on_dispatch
+        self._chain_dispatch_batch = sch.on_dispatch_batch
         self._chain_done = sch.on_job_done
-        sch.on_dispatch = self._on_dispatch
+        # keep the exact bound-method objects installed on the scheduler:
+        # the batch hook compares identity against them to notice when a
+        # later subscriber clobbered the per-task hook (see
+        # _on_dispatch_batch)
+        self._bound_dispatch = self._on_dispatch
+        self._bound_batch = self._on_dispatch_batch
+        sch.on_dispatch = self._bound_dispatch
+        sch.on_dispatch_batch = self._bound_batch
         sch.on_job_done = self._on_job_done
         return self
 
@@ -107,6 +118,54 @@ class MetricsTap:
                 now, 1.0 - sch.rm.free_slots() / total)
         if self._chain_dispatch is not None:
             self._chain_dispatch(task, queue_depth)
+
+    def _on_dispatch_batch(self, tasks: List[Task],
+                           depths: List[int]) -> None:
+        """Wave-path observer: one call per dispatch wave.
+
+        Records exactly what per-task ``_on_dispatch`` calls would have: the
+        wave is unit-slot and bulk-allocated, so the free-slot count the
+        i-th per-event dispatch would have observed is the post-wave count
+        plus the slots the rest of the wave had not yet taken.
+        """
+        sch = self._sch
+        now = sch.loop.now
+        total = sch.rm.total_slots()
+        free_end = sch.rm.free_slots()
+        m = len(tasks)
+        lat_add = self._lat.add
+        depth_add = self.depth_series.add
+        util_add = self.util_series.add
+        for i, task in enumerate(tasks):
+            lat = max(task.dispatch_time - task.submit_time, 0.0)
+            # accumulate per task (not via a local partial sum) so the
+            # float result is bit-identical to per-event observation
+            self.latency_sum += lat
+            if lat > self.latency_max:
+                self.latency_max = lat
+            lat_add(lat)
+            depth_add(now, float(depths[i]))
+            if total:
+                util_add(now, 1.0 - (free_end + (m - 1 - i)) / total)
+        self.dispatches += m
+        # per-task replay: attaching the tap put the engine on the wave
+        # path, which never calls on_dispatch — so per-task subscribers
+        # must be replayed here or they silently observe nothing.
+        if self._chain_dispatch_batch is not None:
+            self._chain_dispatch_batch(tasks, depths)
+            replay = None                   # inner tap replays its own chain
+        else:
+            replay = self._chain_dispatch   # subscriber attached before us
+        cur = sch.on_dispatch
+        if (sch.on_dispatch_batch is self._bound_batch
+                and cur is not None and cur is not self._bound_dispatch):
+            # a subscriber attached *after* us clobbered our per-task hook;
+            # per-event semantics would fire only it (the clobbered chain
+            # below it is dead), so replay to it instead
+            replay = cur
+        if replay is not None:
+            for i, task in enumerate(tasks):
+                replay(task, depths[i])
 
     def _on_job_done(self, job: Job) -> None:
         self.jobs_done += 1

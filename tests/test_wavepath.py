@@ -1,0 +1,435 @@
+"""Wave-path differential suite: the wave-batched hot path must be
+observably bit-identical to the per-event path.
+
+Every scenario is run twice — ``wave_batching=False`` (per-event: one heap
+event per dispatch and per completion) and ``wave_batching=True`` (closed-
+form dispatch waves + coalesced completion batches) — and compared on every
+observable: per-task timestamps/states/attempts/placement, per-job
+``JobStats``, dispatch/completed counters, the serial scheduler clock, the
+virtual clock, resource counters, and the on-dispatch event order (task
+identity + charged queue depth, via both the per-task and the batched
+observer hooks).  Scenarios cover requeues and node failure mid-wave,
+``max_dispatch_per_cycle`` caps, priorities, mixed durations (unsorted
+end-time batches), zero-duration ties, dependency chains, stepped
+``run(until=...)`` horizons that split batches, and injector-fed streaming
+runs with backpressure.
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    EventLoop, Job, JobState, LatencyProfile, ResourceManager, Scheduler,
+    SchedulerConfig, TaskState)
+from repro.workloads import MetricsTap, StreamingInjector
+from repro.workloads.synthetic import FAMILIES as WL_FAMILIES
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
+                      completion_cost=1e-5, startup_cost=1e-3,
+                      cycle_interval=1e-3)
+
+
+class RecordingTap:
+    """Orders dispatch observations identically from either hook."""
+
+    def __init__(self, sch):
+        self.events = []
+        sch.on_dispatch = self._one
+        sch.on_dispatch_batch = self._many
+
+    def _one(self, task, depth):
+        self.events.append((task.job_id, task.index, depth))
+
+    def _many(self, tasks, depths):
+        self.events.extend(
+            (t.job_id, t.index, d) for t, d in zip(tasks, depths))
+
+
+def engine_signature(s, jobs, idmap=None):
+    """Every observable the two paths must agree on, with job ids
+    normalized (the global job-id counter differs between runs)."""
+    idmap = idmap or {j.job_id: i for i, j in enumerate(jobs)}
+    return {
+        "tasks": [(idmap[t.job_id], t.index, t.state, t.node_id, t.attempts,
+                   t.submit_time, t.dispatch_time, t.start_time, t.end_time)
+                  for j in jobs for t in j.tasks],
+        "jobs": [(idmap[j.job_id], j.state, j.completed_tasks,
+                  j.failed_tasks, j.n_clones) for j in jobs],
+        "stats": {idmap[k]: (v.submit_time, v.first_dispatch, v.last_end,
+                             v.task_seconds, v.n_tasks)
+                  for k, v in s.stats.items() if k in idmap},
+        "counters": (s.dispatched, s.completed, s.sched_clock, s.loop.now,
+                     s.rm.free_slots(), s.rm.total_slots(), s._depth,
+                     s._pending, s._pending_zero),
+    }
+
+
+def run_scenario(wave, *, seed=0, nodes=12, slots=1, n_jobs=40, fail=(),
+                 rejoin=(), cap=0, prio=False, mixed=False, stepped=0.0,
+                 deps=False, zero_dur=False, record=True):
+    rng = random.Random(seed)
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots)
+    cfg = SchedulerConfig(wave_batching=wave, max_dispatch_per_cycle=cap)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    tap = RecordingTap(s) if record else None
+    jobs = []
+    for i in range(n_jobs):
+        n = rng.randint(1, 6)
+        if zero_dur:
+            durs = [0.0 if rng.random() < 0.5 else 0.25 for _ in range(n)]
+        elif mixed:
+            durs = [rng.random() * 2 for _ in range(n)]
+        else:
+            durs = [0.5] * n
+        j = Job.array(n, durations=durs,
+                      priority=float(rng.randint(0, 3)) if prio else 0.0)
+        j.max_restarts = 2
+        if deps and jobs and rng.random() < 0.3:
+            j.depends_on = (rng.choice(jobs).job_id,)
+        jobs.append(j)
+        s.submit(j)
+    # failure/heartbeat schedule pre-pushed as one batch (at_many's use case)
+    s.loop.at_many(
+        [(t_fail, s.fail_node, (nid,)) for t_fail, nid in fail]
+        + [(t_up, rm.heartbeat, (nid, t_up)) for t_up, nid in rejoin])
+    if stepped:
+        until = 0.0
+        for _ in range(40):
+            until += stepped
+            s.run(until=until)
+    s.run()
+    sig = engine_signature(s, jobs)
+    if tap is not None:
+        idmap = {j.job_id: i for i, j in enumerate(jobs)}
+        sig["dispatch_order"] = [(idmap[a], b, c) for a, b, c in tap.events]
+    return sig
+
+
+SCENARIOS = {
+    "plain": {},
+    "node_failure_mid_wave": {"fail": ((1.3, 3), (2.7, 7)),
+                              "rejoin": ((5.0, 3),)},
+    "dispatch_cap": {"cap": 3},
+    "priorities": {"prio": True},
+    "mixed_durations": {"mixed": True},
+    "zero_duration_ties": {"zero_dur": True},
+    "stepped_until": {"stepped": 0.37},
+    "dependencies": {"deps": True},
+    "kitchen_sink": {"fail": ((1.3, 3), (2.7, 7)), "rejoin": ((5.0, 3),),
+                     "cap": 5, "prio": True, "mixed": True, "deps": True,
+                     "stepped": 0.41},
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_wave_matches_per_event(name, seed):
+    kw = SCENARIOS[name]
+    a = run_scenario(False, seed=seed, **kw)
+    b = run_scenario(True, seed=seed, **kw)
+    assert a == b
+
+
+def test_wave_numpy_arm_matches_per_event():
+    """Waves of >= 64 tasks take the numpy prefix-sum arm; the float
+    results must still be bit-identical to the sequential recurrence."""
+    a = run_scenario(False, seed=7, nodes=128, n_jobs=8)
+    b = run_scenario(True, seed=7, nodes=128, n_jobs=8)
+    assert a == b
+    # and a single large array (one 8x-oversubscribed wave per cycle)
+    for kw in ({"nodes": 96, "n_jobs": 30},
+               {"nodes": 96, "n_jobs": 30, "mixed": True}):
+        assert run_scenario(False, seed=11, **kw) == \
+            run_scenario(True, seed=11, **kw)
+
+
+def _stream_run(wave, family, seed=3):
+    rm = ResourceManager()
+    rm.add_nodes(32, slots=1)
+    if family == "license_mix":
+        rm.add_license("lic", 4)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(wave_batching=wave))
+    tap = MetricsTap()
+    inj = StreamingInjector(s, WL_FAMILIES[family](seed, 60, 32),
+                            max_active_jobs=8, tap=tap)
+    inj.run()
+    assert inj.drained
+    summary = tap.summary()
+    return {
+        "tap": summary,
+        "counters": (s.dispatched, s.completed, s.sched_clock, s.loop.now),
+        "stats": sorted((v.submit_time, v.first_dispatch, v.last_end,
+                         v.task_seconds, v.n_tasks)
+                        for v in s.stats.values()),
+        "stream": (inj.submitted_jobs, inj.submitted_tasks,
+                   inj.peak_active_jobs),
+    }
+
+
+@pytest.mark.parametrize("family", ["poisson", "bursty",
+                                    "heavy_tail", "mapreduce"])
+def test_streaming_injector_differential(family):
+    """Injector-fed streaming runs (arrival coalescing, backpressure,
+    MetricsTap batch hook) are bit-identical across paths, including the
+    tap's latency/depth/utilization series."""
+    assert _stream_run(False, family) == _stream_run(True, family)
+
+
+def test_gang_mix_family_falls_back_and_matches():
+    """A stream containing gang jobs leaves the unit fast path; the engine
+    must fall back per-event and still match."""
+    assert _stream_run(False, "gang_mix") == _stream_run(True, "gang_mix")
+
+
+# ---------------------------------------------------- wave infrastructure
+def test_event_loop_at_many_orders_like_sequential_at():
+    a, b = EventLoop(), EventLoop()
+    got_a, got_b = [], []
+    evs = [(0.5, got_a.append, (1,)), (0.2, got_a.append, (2,)),
+           (0.5, got_a.append, (3,)), (0.0, got_a.append, (4,))]
+    for t, fn, args in evs:
+        a.at(t, fn, *args)
+    b.at_many([(t, got_b.append, args) for t, fn, args in evs])
+    a.run()
+    b.run()
+    assert got_a == got_b == [4, 2, 1, 3]
+
+
+def test_event_loop_at_many_heapify_path():
+    """A batch larger than the live heap takes the extend+heapify arm."""
+    loop = EventLoop()
+    got = []
+    loop.at(0.05, got.append, "x")
+    loop.at_many([(float(9 - i) / 10, got.append, (i,)) for i in range(10)])
+    loop.run()
+    assert got == [9, "x", 8, 7, 6, 5, 4, 3, 2, 1, 0]
+
+
+def test_event_loop_peek_reserve_at_seq():
+    loop = EventLoop()
+    got = []
+    assert loop.peek() is None
+    seq = loop.reserve_seq()          # reserved early -> wins later ties
+    loop.at(1.0, got.append, "later")
+    assert loop.peek() == (1.0, seq + 1)
+    loop.at_seq(1.0, seq, got.append, "reserved")
+    loop.run()
+    assert got == ["reserved", "later"]
+
+
+def test_event_loop_until_exposed_to_callbacks():
+    loop = EventLoop()
+    seen = []
+    loop.at(1.0, lambda: seen.append(loop.until))
+    loop.run(until=5.0)
+    assert seen == [5.0]
+
+
+def test_wave_batch_counts_as_one_event_but_finishes_all():
+    """A coalesced batch is one heap event however many members it drains:
+    completion accounting must not depend on run()'s event count."""
+    rm = ResourceManager()
+    rm.add_nodes(8, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    job = Job.array(8, duration=0.5)
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert s.completed == 8
+
+
+def test_tap_replays_wave_to_per_task_only_subscriber():
+    """Attaching a MetricsTap flips the engine onto the wave path; a
+    per-task on_dispatch observer that attached first must still see every
+    dispatch (replayed from the tap's batch hook), in order."""
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    seen = []
+    s.on_dispatch = lambda task, depth: seen.append(
+        (task.job_id, task.index, depth))
+    tap = MetricsTap().attach(s)
+    job = Job.array(8, duration=0.2)
+    s.submit(job)
+    s.run()
+    assert tap.dispatches == 8
+    assert [(i, d) for _, i, d in seen] == \
+        [(i, 8 - i) for i in range(8)]
+
+
+def test_tap_replays_wave_to_subscriber_clobbering_after_attach():
+    """A per-task observer set AFTER the tap clobbers the tap's per-task
+    hook; per-event semantics would fire only it — the wave replay must do
+    the same rather than silently dropping it."""
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    tap = MetricsTap().attach(s)
+    seen = []
+    s.on_dispatch = lambda task, depth: seen.append((task.index, depth))
+    job = Job.array(8, duration=0.2)
+    s.submit(job)
+    s.run()
+    assert tap.dispatches == 8
+    assert seen == [(i, 8 - i) for i in range(8)]
+
+
+def test_fused_submit_walk_matches_is_unit_reference():
+    """submit() fuses the unit-job check into its admission walk; it must
+    agree with the standalone _is_unit reference on every job shape."""
+    from repro.core.job import ResourceRequest
+    from repro.core.scheduler import _is_unit
+
+    rng = random.Random(9)
+    shapes = [
+        Job.array(3, duration=0.1),
+        Job.array(3, duration=0.1, request=ResourceRequest(slots=2)),
+        Job.array(2, duration=0.1, request=ResourceRequest(slots=0,
+                                                           mem_mb=64)),
+        Job.parallel_job(4, duration=0.1),
+        Job(name="empty"),
+        Job.array(2, duration=0.1, request=ResourceRequest(
+            licenses=("lic",))),
+    ]
+    hetero = Job(name="hetero")
+    from repro.core.job import Task
+    hetero.tasks = [Task(hetero.job_id, 0, 0.1,
+                         request=ResourceRequest(slots=1)),
+                    Task(hetero.job_id, 1, 0.1,
+                         request=ResourceRequest(slots=3))]
+    shapes.append(hetero)
+    for job in shapes:
+        rm = ResourceManager()
+        rm.add_nodes(4, slots=4)
+        rm.add_license("lic", 2)
+        s = Scheduler(rm, profile=FAST)
+        want = _is_unit(job)
+        s.submit(job)
+        assert s._unit[job.job_id] is want, job.name
+
+
+# ------------------------------------------------ deferred index upkeep
+def test_sync_index_reconciles_wave_allocations():
+    """Wave-path bulk allocate/release defer capacity-index upkeep; any
+    index consumer must see a reconciled view."""
+    from repro.core.job import ResourceRequest
+
+    rm = ResourceManager()
+    rm.add_nodes(6, slots=2)
+    job = Job.array(5, duration=1.0)
+    keys = rm.allocate_unit_wave(job.tasks, [0, 0, 1, 2, 3])
+    assert keys == [(job.job_id, i) for i in range(5)]
+    assert rm.free_slots() == 7
+    # the index is stale until a consumer syncs it
+    node = rm.first_fit(ResourceRequest(slots=2))
+    assert node is not None and node.free_slots >= 2
+    assert rm.index.free == [0, 1, 1, 1, 2, 2]
+    assert [n.node_id for n in rm.free_nodes()] == [1, 2, 3, 4, 5]
+    for t in job.tasks[:3]:
+        t.state = TaskState.RUNNING
+        rm.release_unit(t)
+    rm.sync_index()
+    assert rm.index.free == [2, 2, 1, 1, 2, 2]
+    assert rm.free_slots() == 10
+
+
+def test_wave_then_policy_fallback_sees_synced_index():
+    """A non-unit job arriving mid-run flips the engine to the policy path,
+    which must observe index state consistent with prior wave activity."""
+    from repro.core import BackfillPolicy  # noqa: F401  (policy import check)
+    from repro.core.job import ResourceRequest
+
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=2)
+    s = Scheduler(rm, profile=FAST)
+    s.submit(Job.array(4, duration=1.0))
+    s.run(until=0.5)                       # wave dispatched, tasks running
+    fat = Job.array(2, duration=0.5, request=ResourceRequest(slots=2))
+    s.submit(fat)                          # forces _cycle_policy
+    s.run()
+    assert fat.state is JobState.COMPLETED
+    rm.sync_index()
+    for nid, node in rm.nodes.items():
+        assert rm.index.free[nid] == node.free_slots
+
+
+# ------------------------------------------- satellite regression tests
+def test_dispatch_after_node_failure_without_eager_filter():
+    """_node_down no longer rebuilds the free stack; stale entries for the
+    failed node must die lazily without dropping or double-placing tasks."""
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    warm = Job.array(4, duration=0.2)
+    s.submit(warm)
+    s.run()                                # all four nodes on the free stack
+    s.fail_node(2)
+    job = Job.array(6, duration=0.2)
+    job.max_restarts = 1
+    s.submit(job)
+    s.run()
+    assert job.state is JobState.COMPLETED
+    assert all(t.node_id != 2 for t in job.tasks)
+
+
+def test_rejoin_duplicate_stack_entries_never_overallocate():
+    """Failure + rejoin leaves duplicate stack entries for the node; lazy
+    validation must not place two tasks into one slot."""
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    running = Job.array(2, duration=3.0)
+    running.max_restarts = 1
+    s.submit(running)
+    s.run(until=1.0)
+    s.fail_node(0)
+    s.run(until=2.0)
+    rm.heartbeat(0, now=2.0)               # rejoin: fresh stack entries
+    s.submit(Job.array(4, duration=0.3))
+    s.run()
+    for node in rm.nodes.values():
+        assert node.free_slots >= 0
+        assert len(node.running) <= node.slots
+    assert running.state is JobState.COMPLETED
+
+
+def test_speculation_median_cache_matches_statistics_median():
+    """_speculate's amortized median must equal a fresh statistics.median
+    over the durations window whenever it is consulted."""
+    import statistics
+
+    cfg = SchedulerConfig(speculative=True, speculative_factor=3.0)
+    rm = ResourceManager()
+    rm.add_nodes(8, slots=1)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    rng = random.Random(5)
+    until = 0.0
+    for i in range(12):
+        n = rng.randint(2, 6)
+        s.submit(Job.array(
+            n, durations=[rng.random() * 2 + 0.05 for _ in range(n)]))
+        until += 1.0
+        s.run(until=until)
+        if len(s._durations) >= 8:
+            s._speculate()
+            assert s._med_value == statistics.median(s._durations)
+    s.run()
+
+
+def test_speculative_run_still_completes_with_wave_config_on():
+    """Speculation forces the per-event path even when wave batching is
+    configured on; behaviour matches the dedicated speculation test."""
+    cfg = SchedulerConfig(speculative=True, speculative_factor=3.0,
+                          wave_batching=True)
+    rm = ResourceManager()
+    rm.add_nodes(8, slots=1)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    durations = [1.0] * 15 + [50.0]
+    job = Job.array(16, durations=durations)
+    s.submit(job)
+    s.run(until=2000.0)
+    assert job.state is JobState.COMPLETED
+    assert job.completed_tasks == 16
+    assert [t for t in job.tasks if t.speculative_of is not None]
