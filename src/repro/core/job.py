@@ -33,6 +33,8 @@ class TaskState(enum.Enum):
     FAILED = "failed"
     PREEMPTED = "preempted"
     CANCELLED = "cancelled"
+    BACKOFF = "backoff"        # failed; re-eligible after a virtual-time delay
+    QUARANTINED = "quarantined"  # poison task: repeated fault-coincident deaths
 
 
 @dataclass(slots=True)
@@ -55,6 +57,8 @@ _TASK_LAZY = {
     "dispatch_time": 0.0,
     "start_time": 0.0,
     "end_time": 0.0,
+    "fault_hits": 0,           # attempts lost to node deaths (quarantine)
+    "backoff_until": 0.0,      # requeue-eligibility time (retry backoff)
 }
 
 
@@ -73,6 +77,8 @@ class Task:
     end_time: float = 0.0
     attempts: int = 0
     speculative_of: Optional[int] = None  # straggler-mitigation clone
+    fault_hits: int = 0
+    backoff_until: float = 0.0
 
     def __init__(self, job_id: int, index: int, duration: float = 0.0,
                  payload: Optional[Callable] = None,
@@ -138,6 +144,11 @@ class Job:
     failed_tasks: int = 0
     n_clones: int = 0                 # speculative clones appended to tasks
     max_restarts: int = 0             # per-task restart budget (§3.2.7)
+    # what a permanent task failure means for the rest of the job:
+    #   "retry"       — siblings keep running; job FAILED at the end (default)
+    #   "fail_fast"   — cancel every non-terminal sibling, retire FAILED now
+    #   "best_effort" — job retires COMPLETED if any task completed
+    failure_policy: str = "retry"
 
     @classmethod
     def array(cls, n_tasks: int, duration: float = 0.0, *,

@@ -177,6 +177,16 @@ class Node:
     load: float = 0.0
     last_heartbeat: float = 0.0
     running: Set[Tuple[int, int]] = field(default_factory=set)
+    # fault-plane dynamics (core/faults.py).  ``alive`` distinguishes a
+    # *silently* dead node from its scheduler-visible state: the node stays
+    # UP (the scheduler keeps dispatching to it — lost work) until a
+    # heartbeat sweep notices the lapse.  ``muted`` models heartbeat loss
+    # without death: the node stops responding to sweeps but its tasks keep
+    # completing, so detection is a false positive that requeues live work.
+    # ``slow`` is a duration multiplier for degraded nodes (>= 1.0).
+    alive: bool = True
+    muted: bool = False
+    slow: float = 1.0
 
     def __post_init__(self):
         self.free_slots = self.slots
@@ -233,6 +243,18 @@ class ResourceManager:
         # consumer (free_nodes, first_fit, candidates, the policy cycle)
         # reads it — O(nodes touched since last sync), not O(nodes)
         self._index_dirty: Set[int] = set()
+        # fault-plane aggregates, kept as counters so the scheduler's
+        # completion hot path pays one int truthiness check when no fault
+        # machinery is active: UP-but-silently-dead nodes (completions on
+        # them must be suppressed) and degraded (slow != 1.0) nodes
+        self._hidden_dead = 0
+        self._slow_nodes = 0
+        # license holds by task key: makes ``release`` idempotent for
+        # consumables.  Without it a second release for the same hold (e.g.
+        # a node-death requeue racing a direct release call) silently
+        # double-credits the license pool — the node-side release is guarded
+        # by ``node.running`` but the license return was unconditional.
+        self._lic_holds: Set[Tuple[int, int]] = set()
 
     # ---------------------------------------------------- aggregate upkeep
     def _join_up(self, node: Node) -> None:
@@ -277,6 +299,11 @@ class ResourceManager:
         node = self.nodes[node_id]
         node.last_heartbeat = now
         node.load = load
+        if not node.alive:              # a received beat proves life
+            node.alive = True
+            if node.state is NodeState.UP:
+                self._hidden_dead -= 1  # recovered before detection
+        node.muted = False
         if node.state is NodeState.DOWN:
             node.state = NodeState.UP   # node rejoined (elastic growth)
             self._join_up(node)
@@ -290,6 +317,8 @@ class ResourceManager:
             if (node.state is NodeState.UP
                     and now - node.last_heartbeat > self.heartbeat_timeout):
                 node.state = NodeState.DOWN
+                if not node.alive:
+                    self._hidden_dead -= 1   # silent death now detected
                 self._leave_up(node)
                 # forget the node's workload (as mark_down does): its tasks
                 # are requeued with node_id=None, so nothing will ever
@@ -311,10 +340,57 @@ class ResourceManager:
     def on_node_up(self, callback) -> None:
         self._up_callbacks.append(callback)
 
+    def sweep_heartbeats(self, now: float) -> List[int]:
+        """One heartbeat-sweep round (scheduler-driven when
+        ``SchedulerConfig.heartbeat_interval > 0``): responsive nodes are
+        stamped as of ``now`` — a live, unmuted node always answers the
+        poll — then lapsed ones are marked DOWN.  Detection latency for a
+        silent death is therefore a virtual-time quantity in
+        ``[heartbeat_timeout, heartbeat_timeout + heartbeat_interval]``,
+        not an oracle."""
+        UP = NodeState.UP
+        for node in self.nodes.values():
+            if node.state is UP and node.alive and not node.muted:
+                node.last_heartbeat = now
+        return self.check_heartbeats(now)
+
+    def fail_silent(self, node_id: int, now: float) -> None:
+        """Kill a node without telling anyone: state stays UP (the scheduler
+        keeps dispatching to it), completions on it stop, and its heartbeat
+        freezes at ``now`` — only a sweep (or an announced ``mark_down``)
+        turns the death into requeues."""
+        node = self.nodes[node_id]
+        if node.state is not NodeState.UP or not node.alive:
+            return
+        node.alive = False
+        node.last_heartbeat = now
+        self._hidden_dead += 1
+
+    def set_muted(self, node_id: int, muted: bool, now: float = 0.0) -> None:
+        """Start/stop heartbeat loss on a live node (false-positive fault)."""
+        node = self.nodes[node_id]
+        if node.muted == muted:
+            return
+        node.muted = muted
+        if not muted:
+            # beats resume: rejoin if the lapse was already "detected"
+            self.heartbeat(node_id, now)
+
+    def set_slow(self, node_id: int, factor: float) -> None:
+        """Degrade (factor > 1) or restore (factor = 1) a node's speed."""
+        node = self.nodes[node_id]
+        if node.slow == 1.0 and factor != 1.0:
+            self._slow_nodes += 1
+        elif node.slow != 1.0 and factor == 1.0:
+            self._slow_nodes -= 1
+        node.slow = factor
+
     def mark_down(self, node_id: int) -> List[Tuple[int, int]]:
         """Fail a node; returns the task keys that were running on it."""
         node = self.nodes[node_id]
         if node.state is NodeState.UP:
+            if not node.alive:
+                self._hidden_dead -= 1   # silent death now detected
             self._leave_up(node)
         node.state = NodeState.DOWN
         orphans = list(node.running)
@@ -334,9 +410,11 @@ class ResourceManager:
 
     # ------------------------------------------------------ allocation
     def allocate(self, task: Task, node_id: int) -> None:
-        for lic in task.request.licenses:
-            assert self.licenses.get(lic, 0) > 0, lic
-            self.licenses[lic] -= 1
+        if task.request.licenses:
+            for lic in task.request.licenses:
+                assert self.licenses.get(lic, 0) > 0, lic
+                self.licenses[lic] -= 1
+            self._lic_holds.add(task.key)
         node = self.nodes[node_id]
         node.allocate(task)
         task.node_id = node_id
@@ -348,8 +426,15 @@ class ResourceManager:
                 self._free_cache = None
 
     def release(self, task: Task) -> None:
-        for lic in task.request.licenses:
-            self.licenses[lic] = self.licenses.get(lic, 0) + 1
+        # consumables come back exactly once per hold: the hold set (not the
+        # node-side ``running`` membership, which mark_down clears) is what
+        # guards the credit, so a node dying mid-hold returns the licenses
+        # on requeue and a duplicate release is a no-op instead of a silent
+        # double-free (tests/test_faultplane.py pins both)
+        if task.request.licenses and task.key in self._lic_holds:
+            self._lic_holds.discard(task.key)
+            for lic in task.request.licenses:
+                self.licenses[lic] = self.licenses.get(lic, 0) + 1
         if task.node_id is not None and task.node_id in self.nodes:
             node = self.nodes[task.node_id]
             held = task.key in node.running

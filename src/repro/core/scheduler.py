@@ -51,7 +51,23 @@ class SchedulerConfig:
     speculative: bool = False          # straggler mitigation (clone slow tasks)
     speculative_factor: float = 2.0    # clone when runtime > factor * median
     preemption: bool = False
-    heartbeat_interval: float = 0.0    # 0 = disabled (sim drives failures)
+    # heartbeat-driven failure detection: > 0 schedules periodic
+    # ``ResourceManager.sweep_heartbeats`` sweeps on the event loop, so a
+    # silent node death is detected after a measurable virtual-time lag
+    # (heartbeat_timeout .. + interval) and live nodes beat on task
+    # completions.  0 keeps the legacy escape hatch: no sweeps, failures
+    # only become visible through explicit ``mark_down``/``check_heartbeats``
+    # calls by the driver (tests, the fault plane's announced failures).
+    heartbeat_interval: float = 0.0
+    # retry lifecycle: a failed/orphaned attempt with remaining budget is
+    # requeued after ``retry_backoff * 2^(attempts-1)`` virtual seconds
+    # (capped), instead of instantly; 0 preserves instant requeue.
+    retry_backoff: float = 0.0
+    retry_backoff_cap: float = 300.0
+    # poison-task quarantine: a task whose attempts coincide with this many
+    # node deaths is QUARANTINED (counts as a permanent failure) instead of
+    # being requeued forever; 0 disables.
+    quarantine_after: int = 0
     max_dispatch_per_cycle: int = 0    # 0 = unlimited
     # wave batching: dispatch whole free-capacity waves with a closed-form
     # serial-clock recurrence and coalesced completion batches.  Observably
@@ -125,6 +141,11 @@ class Scheduler:
         self.sched_clock = 0.0           # serial scheduler busy-until
         self.dispatched = 0
         self.completed = 0
+        # fault-lifecycle counters (workloads/metrics.py reads these)
+        self.requeues = 0                # attempts returned to the queue
+        self.lost_work_s = 0.0           # virtual seconds of discarded work
+        self.quarantined = 0             # poison tasks taken out of rotation
+        self._sweep_armed = False        # heartbeat sweep scheduled on loop
         self._cursor: Dict[int, int] = {}          # job_id -> next task index
         self._requeue: Deque[Task] = collections.deque()
         self._free_stack: List = []      # fast path: free unit slots, as
@@ -165,6 +186,8 @@ class Scheduler:
         self.on_dispatch_batch: Optional[
             Callable[[List[Task], List[int]], None]] = None
         self.on_job_done: Optional[Callable[[Job], None]] = None
+        self.on_submit: Optional[Callable[[Job], None]] = None
+        self.on_requeue: Optional[Callable[[Task, float], None]] = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
 
@@ -209,6 +232,12 @@ class Scheduler:
         self.stats[jid] = JobStats(
             job_id=jid, submit_time=now, n_tasks=len(tasks))
         self._request_cycle()
+        if self.config.heartbeat_interval > 0.0 and not self._sweep_armed:
+            self._sweep_armed = True
+            self.loop.at(now + self.config.heartbeat_interval,
+                         self._heartbeat_sweep)
+        if self.on_submit is not None:
+            self.on_submit(job)
 
     # ------------------------------------------------ pending accounting
     def _count_in(self, job: Job) -> None:
@@ -470,6 +499,7 @@ class Scheduler:
         att_app = atts.append
         observe = self.on_dispatch_batch is not None
         depths: Optional[List[int]] = [] if observe else None
+        any_slow = rm._slow_nodes > 0
         if _np is not None and m >= self._WAVE_NUMPY:
             d = _np.arange(depth0, depth0 - m, -1, dtype=_np.float64)
             if skips is not None:
@@ -490,7 +520,12 @@ class Scheduler:
                 task.dispatch_time = clocks[i]
                 st = starts[i]
                 task.start_time = st
-                end_app(st + task.duration)
+                dur = task.duration
+                if any_slow:
+                    slow = wnodes[i].slow
+                    if slow != 1.0:   # same float ops as _dispatch
+                        dur = dur * slow
+                end_app(st + dur)
                 a = task.attempts + 1
                 task.attempts = a
                 att_app(a)
@@ -506,7 +541,12 @@ class Scheduler:
                 task.dispatch_time = s
                 st = s + su
                 task.start_time = st
-                end_app(st + task.duration)
+                dur = task.duration
+                if any_slow:
+                    slow = wnodes[i].slow
+                    if slow != 1.0:   # same float ops as _dispatch
+                        dur = dur * slow
+                end_app(st + dur)
                 a = task.attempts + 1
                 task.attempts = a
                 att_app(a)
@@ -584,6 +624,11 @@ class Scheduler:
         # dispatched with speculation off, so skip it unless the config
         # flipped mid-flight (then the per-event fallback keeps it warm)
         durations = self._durations if self.config.speculative else None
+        # fault-plane state, hoisted: silent deaths and sweeps only change
+        # between events, and the drain yields to every event, so these are
+        # loop-invariant within one call (no-fault runs pay two comparisons)
+        hidden = rm._hidden_dead > 0
+        hb = self.config.heartbeat_interval > 0.0
         # deferred scalar state, flushed at yields and around subcalls that
         # observe it (_retire -> on_job_done may submit; _task_end reads
         # and advances the clock).  The heap-head yield bound is likewise
@@ -615,6 +660,13 @@ class Scheduler:
             # stale member: the node failed mid-wave and the task was
             # requeued/re-dispatched — same guard as _finish_sim/_task_end
             if task.attempts != att or task.state is not RUNNING:
+                pos += 1
+                last_e = e
+                continue
+            # silently-dead node: the completion never happens (same
+            # suppression as _task_end; the task stays RUNNING until a
+            # heartbeat sweep detects the lapse and requeues it)
+            if hidden and not wnodes[pos].alive:
                 pos += 1
                 last_e = e
                 continue
@@ -659,6 +711,9 @@ class Scheduler:
                     freed += 1
                     dirty.add(node.node_id)
             free_stack.append(node)
+            if hb:
+                # task activity is a heartbeat (matches _task_end)
+                node.last_heartbeat = e
             s = (s if s > e else e) + completion_cost
             ccount += 1
             if durations is not None:
@@ -686,8 +741,7 @@ class Scheduler:
                 freed = 0
                 self.completed += ccount
                 ccount = 0
-                self._retire(job, JobState.COMPLETED if job.failed_tasks == 0
-                             else JobState.FAILED, e)
+                self._retire(job, self._terminal_state(job), e)
                 if not loop._running:
                     break
                 s = self.sched_clock
@@ -800,7 +854,12 @@ class Scheduler:
         if self.executor is not None and task.payload is not None:
             self.loop.at(start, self._run_payload, task)
         else:
-            self.loop.at(start + task.duration, self._finish_sim, task,
+            dur = task.duration
+            if self.rm._slow_nodes:
+                slow = self.rm.nodes[node_id].slow
+                if slow != 1.0:       # degraded node stretches the payload
+                    dur = dur * slow
+            self.loop.at(start + dur, self._finish_sim, task,
                          task.attempts)
 
     def _run_payload(self, task: Task) -> None:
@@ -827,12 +886,24 @@ class Scheduler:
         if task.state is not TaskState.RUNNING:
             return  # cancelled / preempted / node already failed
         now = self.loop.now
+        nid = task.node_id
+        if self.rm._hidden_dead and nid is not None \
+                and not self.rm.nodes[nid].alive:
+            # the node died silently mid-run: this completion never happens.
+            # The task stays RUNNING (its lease apparently live) until a
+            # heartbeat sweep detects the lapse and requeues it — detection
+            # latency, not an oracle.  The wave drain applies the same
+            # suppression so both paths stay bit-identical.
+            return
         task.end_time = now
         task.state = TaskState.COMPLETED if ok else TaskState.FAILED
         self._running_tasks.pop(task.key, None)
         self.rm.release(task)
-        if self._fast and task.request.slots == 1 and task.node_id is not None:
-            self._free_stack.append(self.rm.nodes[task.node_id])
+        if self._fast and task.request.slots == 1 and nid is not None:
+            self._free_stack.append(self.rm.nodes[nid])
+        if self.config.heartbeat_interval > 0.0 and nid is not None:
+            # task activity is a heartbeat: a completing node is a live node
+            self.rm.nodes[nid].last_heartbeat = now
         self.sched_clock = max(self.sched_clock, now) + self.profile.completion_cost
         self.completed += 1
         self._durations.append(max(now - task.start_time, 1e-9))
@@ -852,22 +923,23 @@ class Scheduler:
             task_for_stats = orig
         else:
             task_for_stats = task
+        permanent = False
         if ok:
             job.completed_tasks += 1
             self.stats[job.job_id].task_seconds += task.duration
         else:
+            self.lost_work_s += max(now - task.start_time, 0.0)
             if task.attempts <= job.max_restarts:
-                task.state = TaskState.WAITING
-                self._requeue.append(task)
-                self._depth += 1
-                self._count_requeued(task)
+                self._requeue_task(task, now)
             else:
                 job.failed_tasks += 1
+                permanent = True
         st = self.stats[job.job_id]
         st.last_end = max(st.last_end, now)
-        if job.done:
-            state = JobState.COMPLETED if job.failed_tasks == 0 else JobState.FAILED
-            self._retire(job, state, now)
+        if permanent and job.failure_policy == "fail_fast":
+            self._fail_fast(job, now)
+        elif job.done:
+            self._retire(job, self._terminal_state(job), now)
         self._request_cycle()
 
     def _retire(self, job: Job, state: JobState, now: float) -> None:
@@ -905,6 +977,77 @@ class Scheduler:
         task.state = TaskState.CANCELLED
 
     # --------------------------------------------- fault tolerance paths
+    def _heartbeat_sweep(self) -> None:
+        """Periodic heartbeat poll (``heartbeat_interval > 0``): stamp the
+        responsive nodes, mark lapsed ones DOWN (which requeues their work
+        via the down callback).  Re-arms itself while jobs are in flight;
+        goes quiet when idle and is re-armed by the next ``submit``, so an
+        idle engine's event loop can still drain."""
+        self._sweep_armed = False
+        self.rm.sweep_heartbeats(self.loop.now)
+        if self._active_jobs:
+            self._sweep_armed = True
+            self.loop.at(self.loop.now + self.config.heartbeat_interval,
+                         self._heartbeat_sweep)
+
+    def _requeue_task(self, task: Task, now: float) -> None:
+        """Return a failed/orphaned attempt to the queue — immediately, or
+        (``retry_backoff > 0``) only after an exponential-backoff delay in
+        virtual time, during which the task is in BACKOFF limbo: invisible
+        to every dispatch path and to the pending counters."""
+        self.requeues += 1
+        base = self.config.retry_backoff
+        if base <= 0.0:
+            task.state = TaskState.WAITING
+            self._requeue.append(task)
+            self._depth += 1
+            self._count_requeued(task)
+        else:
+            delay = base * (2.0 ** (task.attempts - 1))
+            cap = self.config.retry_backoff_cap
+            if cap > 0.0 and delay > cap:
+                delay = cap
+            task.state = TaskState.BACKOFF
+            task.backoff_until = now + delay
+            self.loop.at(now + delay, self._backoff_ready, task, task.attempts)
+        if self.on_requeue is not None:
+            self.on_requeue(task, now)
+
+    def _backoff_ready(self, task: Task, attempt: int) -> None:
+        """Backoff expiry: make the task dispatch-eligible — unless the job
+        retired or the task moved on (cancelled, quarantined) meanwhile."""
+        if (task.state is not TaskState.BACKOFF or task.attempts != attempt
+                or task.job_id not in self._active_jobs):
+            return
+        task.state = TaskState.WAITING
+        self._requeue.append(task)
+        self._depth += 1
+        self._count_requeued(task)
+        self._request_cycle()
+
+    def _terminal_state(self, job: Job) -> JobState:
+        """Job outcome under its failure policy (identical to the historical
+        COMPLETED-iff-no-failures rule unless the policy says otherwise)."""
+        if job.failed_tasks == 0:
+            return JobState.COMPLETED
+        if job.failure_policy == "best_effort" and job.completed_tasks > 0:
+            return JobState.COMPLETED
+        return JobState.FAILED
+
+    def _fail_fast(self, job: Job, now: float) -> None:
+        """fail_fast policy: a permanent task failure kills the whole job —
+        cancel every non-terminal sibling (running work counts as lost) and
+        retire FAILED immediately."""
+        for t in job.tasks:
+            ts = t.state
+            if ts is TaskState.RUNNING:
+                self.lost_work_s += max(now - t.start_time, 0.0)
+                self._cancel(t)
+            elif ts in (TaskState.WAITING, TaskState.PREEMPTED,
+                        TaskState.BACKOFF, TaskState.DISPATCHED):
+                self._cancel(t)
+        self._retire(job, JobState.FAILED, now)
+
     def _node_down(self, node_id: int) -> None:
         """Requeue orphaned tasks of a failed node (job restarting §3.2.7).
 
@@ -914,6 +1057,8 @@ class Scheduler:
         node state before use, so stale entries die lazily — an O(1)
         failure instead of an O(stack) rebuild per failure.
         """
+        now = self.loop.now
+        quarantine_after = self.config.quarantine_after
         touched: List[Job] = []
         for t in list(self._running_tasks.values()):
             if t.node_id != node_id:
@@ -927,21 +1072,31 @@ class Scheduler:
             # (release is a no-op on the node side: task.key was cleared
             # from node.running)
             self.rm.release(t)
-            t.state = TaskState.WAITING
+            self.lost_work_s += max(now - t.start_time, 0.0)
             t.node_id = None
-            if t.attempts <= job.max_restarts:
-                self._requeue.append(t)
-                self._depth += 1
-                self._count_requeued(t)
+            hits = t.fault_hits + 1
+            t.fault_hits = hits
+            if quarantine_after and hits >= quarantine_after:
+                # poison task: its attempts keep coinciding with node
+                # deaths — take it out of rotation regardless of budget
+                t.state = TaskState.QUARANTINED
+                self.quarantined += 1
+                job.failed_tasks += 1
+                touched.append(job)
+            elif t.attempts <= job.max_restarts:
+                self._requeue_task(t, now)
             else:
                 t.state = TaskState.FAILED
                 job.failed_tasks += 1
                 touched.append(job)
-        now = self.loop.now
         for job in touched:
             # the failed task may have been the job's last outstanding one
-            if job.job_id in self._active_jobs and job.done:
-                self._retire(job, JobState.FAILED, now)
+            if job.job_id not in self._active_jobs:
+                continue
+            if job.failure_policy == "fail_fast":
+                self._fail_fast(job, now)
+            elif job.done:
+                self._retire(job, self._terminal_state(job), now)
         self._request_cycle()
 
     def _node_up(self, node_id: int) -> None:

@@ -8,8 +8,8 @@ from repro.workloads.swf import (
     SWFRecord, jobs_from_swf, parse_swf_line, read_swf, specs_to_swf,
     write_swf)
 from repro.workloads.synthetic import (
-    FAMILIES as SYNTHETIC_FAMILIES, TASKSET_PARAMS, bursty_arrivals,
-    constant_durations, constant_taskset, diurnal_arrivals,
+    FAMILIES as SYNTHETIC_FAMILIES, FAULT_PROFILES, TASKSET_PARAMS,
+    bursty_arrivals, constant_durations, constant_taskset, diurnal_arrivals,
     lognormal_durations, map_reduce_stream, mixed_shapes, pareto_durations,
     poisson_arrivals, synthetic_stream, zero_slot_shape)
 
@@ -18,7 +18,8 @@ __all__ = [
     "JobSpec", "materialize", "validate_stream",
     "SWFRecord", "jobs_from_swf", "parse_swf_line", "read_swf",
     "specs_to_swf", "write_swf",
-    "SYNTHETIC_FAMILIES", "TASKSET_PARAMS", "bursty_arrivals",
+    "SYNTHETIC_FAMILIES", "FAULT_PROFILES", "TASKSET_PARAMS",
+    "bursty_arrivals",
     "constant_durations", "constant_taskset", "diurnal_arrivals",
     "lognormal_durations", "map_reduce_stream", "mixed_shapes",
     "pareto_durations", "poisson_arrivals", "synthetic_stream",

@@ -78,10 +78,15 @@ class MetricsTap:
         self.depth_series = TimeSeries(max_points)
         self.util_series = TimeSeries(max_points)
         self.jobs_done = 0
+        # failure/recovery accounting (fault plane / retry lifecycle)
+        self.requeues = 0
+        self.requeue_series = TimeSeries(max_points)
+        self.lost_work_series = TimeSeries(max_points)
         self._sch: Optional[Scheduler] = None
         self._chain_dispatch = None
         self._chain_dispatch_batch = None
         self._chain_done = None
+        self._chain_requeue = None
         self._bound_dispatch = None
         self._bound_batch = None
 
@@ -99,6 +104,8 @@ class MetricsTap:
         sch.on_dispatch = self._bound_dispatch
         sch.on_dispatch_batch = self._bound_batch
         sch.on_job_done = self._on_job_done
+        self._chain_requeue = sch.on_requeue
+        sch.on_requeue = self._on_requeue
         return self
 
     # ------------------------------------------------------------ hooks
@@ -172,6 +179,15 @@ class MetricsTap:
         if self._chain_done is not None:
             self._chain_done(job)
 
+    def _on_requeue(self, task: Task, now: float) -> None:
+        """Fault-lifecycle hook: fires once per requeue decision (immediate
+        or backoff), never on the no-fault hot path."""
+        self.requeues += 1
+        self.requeue_series.add(now, float(self.requeues))
+        self.lost_work_series.add(now, self._sch.lost_work_s)
+        if self._chain_requeue is not None:
+            self._chain_requeue(task, now)
+
     # ---------------------------------------------------------- summary
     def summary(self) -> Dict:
         n = max(self.dispatches, 1)
@@ -186,4 +202,30 @@ class MetricsTap:
             # run's shape, not a tail slice
             "queue_depth_series": list(self.depth_series.points),
             "utilization_series": list(self.util_series.points),
+            **self._fault_summary(),
+        }
+
+    def _fault_summary(self) -> Dict:
+        """Failure/recovery quantities (all zero on a no-fault run).
+
+        ``goodput_fraction`` is completed task-seconds over completed plus
+        discarded (lost-work) task-seconds — the goodput-vs-throughput
+        split: occupancy the workload kept vs. occupancy that churn threw
+        away.  Scheduler counters are authoritative; the series here are
+        the tap's bounded-sampled views of them over virtual time.
+        """
+        sch = self._sch
+        if sch is None:
+            return {}
+        goodput = sum(st.task_seconds for st in sch.stats.values())
+        lost = sch.lost_work_s
+        denom = goodput + lost
+        return {
+            "requeues": sch.requeues,
+            "quarantined": sch.quarantined,
+            "lost_work_s": lost,
+            "goodput_task_seconds": goodput,
+            "goodput_fraction": goodput / denom if denom > 0.0 else 1.0,
+            "requeue_series": list(self.requeue_series.points),
+            "lost_work_series": list(self.lost_work_series.points),
         }

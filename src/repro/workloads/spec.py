@@ -38,6 +38,7 @@ class JobSpec:
     parallel: bool = False                       # gang: all tasks co-start
     depends_on_prev: Tuple[int, ...] = ()        # stream offsets, e.g. (1,)
     max_restarts: int = 0
+    failure_policy: str = "retry"                # retry|fail_fast|best_effort
     meta: Dict[str, object] = field(default_factory=dict)
 
     def build(self, depends_on: Tuple[int, ...] = ()) -> Job:
@@ -49,6 +50,7 @@ class JobSpec:
             depends_on=depends_on)
         job.parallel = self.parallel
         job.max_restarts = self.max_restarts
+        job.failure_policy = self.failure_policy
         return job
 
 

@@ -20,6 +20,7 @@ import math
 import random
 from typing import Callable, Dict, Iterator, Optional, Sequence, Tuple
 
+from repro.core.faults import FaultProfile
 from repro.core.job import ResourceRequest
 from repro.workloads.spec import JobSpec
 
@@ -187,7 +188,9 @@ def map_reduce_stream(*, seed: int = 0, rate: float = 2.0,
 def constant_taskset(t: float, n: int, P: int, *,
                      wave_tasks: int = 0,
                      name: str = "taskset",
-                     arrival: float = 0.0) -> Iterator[JobSpec]:
+                     arrival: float = 0.0,
+                     max_restarts: int = 0,
+                     failure_policy: str = "retry") -> Iterator[JobSpec]:
     """The paper's constant-time task set generalized to arbitrary (t, n, P):
     n·P tasks of duration t submitted at one instant.
 
@@ -202,7 +205,8 @@ def constant_taskset(t: float, n: int, P: int, *,
     total = n * P
     if wave_tasks <= 0 or wave_tasks >= total:
         yield JobSpec(arrival=arrival, n_tasks=total, duration=t,
-                      name=f"{name}-{n}x{P}")
+                      name=f"{name}-{n}x{P}", max_restarts=max_restarts,
+                      failure_policy=failure_policy)
         return
     emitted = 0
     for w in itertools.count():
@@ -210,7 +214,8 @@ def constant_taskset(t: float, n: int, P: int, *,
         if k <= 0:
             return
         yield JobSpec(arrival=arrival, n_tasks=k, duration=t,
-                      name=f"{name}-{n}x{P}-w{w}")
+                      name=f"{name}-{n}x{P}-w{w}", max_restarts=max_restarts,
+                      failure_policy=failure_policy)
         emitted += k
 
 
@@ -275,6 +280,37 @@ def _fam_mapreduce(seed: int, n_jobs: int, P: int) -> Iterator[JobSpec]:
     return map_reduce_stream(seed=seed, rate=max(P / 64.0, 0.5),
                              n_stages=max(n_jobs // 2, 1),
                              map_tasks=max(P // 8, 2))
+
+
+#: Named fault regimes for the fault plane (virtual seconds, per-node MTBF)
+#: — the chaos-side analogue of the workload FAMILIES below.  Keys are what
+#: ``benchmarks/fault_replay.py --profile`` accepts.
+FAULT_PROFILES: Dict[str, FaultProfile] = {
+    # rare independent crashes, unexceptional repair times
+    "calm": FaultProfile(name="calm", mtbf=20000.0, mttr=120.0),
+    # heavy churn: every node crashes often enough that most runs see many
+    "churn": FaultProfile(name="churn", mtbf=2000.0, mttr=60.0),
+    # correlated rack outages: 32-node failure domains die as a unit
+    "rack_outage": FaultProfile(name="rack_outage", domain_size=32,
+                                domain_mtbf=20000.0, domain_mttr=300.0),
+    # transient flaps: frequent, but back within seconds
+    "flaky": FaultProfile(name="flaky", flap_mtbf=4000.0, flap_mttr=5.0),
+    # silent deaths only: detection waits on heartbeat sweeps
+    "silent": FaultProfile(name="silent", mtbf=4000.0, mttr=120.0,
+                           silent_fraction=1.0),
+    # heartbeat loss without death: sweeps requeue live work
+    "mute": FaultProfile(name="mute", mute_mtbf=4000.0, mute_mttr=45.0),
+    # degraded nodes: payloads stretch 4x during degradation windows
+    "degraded": FaultProfile(name="degraded", degrade_mtbf=4000.0,
+                             degrade_mttr=240.0, degrade_factor=4.0),
+    # everything at once (integration chaos)
+    "kitchen_sink": FaultProfile(name="kitchen_sink", mtbf=6000.0,
+                                 mttr=90.0, silent_fraction=0.25,
+                                 flap_mtbf=8000.0, flap_mttr=5.0,
+                                 domain_size=32, domain_mtbf=40000.0,
+                                 domain_mttr=300.0, degrade_mtbf=10000.0,
+                                 degrade_mttr=240.0, degrade_factor=4.0),
+}
 
 
 #: name -> builder(seed, n_jobs, P) for the replay CLI / smoke tests.

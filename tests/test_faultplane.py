@@ -1,0 +1,420 @@
+"""Fault-plane suite: deterministic chaos, the retry lifecycle, and
+wave/per-event equivalence under churn.
+
+Three layers of pinning:
+
+* **Differential** — every fault regime (announced churn, silent deaths,
+  flaps, rack outages, mutes, degraded nodes, all-at-once) is run on both
+  the wave-batched and the per-event dispatch path, ≥3 fault seeds for the
+  churn regimes, each seeing nodes fail, rejoin and fail again; every
+  observable (per-task timestamps/states/attempts/placement, job states,
+  scheduler counters, the serial clock, the plane's own injection ledger)
+  must be bit-identical.
+* **Replay** — the same (workload seed, fault seed) pair must reproduce
+  the identical run, and an idle fault plane must cost nothing: a plane
+  with an all-zero profile is indistinguishable from no plane at all.
+* **Lifecycle mechanics** — targeted scenarios for each mechanism: sweep
+  detection latency is bounded by ``heartbeat_timeout + interval``,
+  exponential backoff delays redispatch by ``base * 2^(attempts-1)``,
+  poison tasks quarantine, ``fail_fast``/``best_effort`` job policies,
+  licenses return exactly once when a node dies mid-hold, and the plane
+  goes quiet when the workload drains (held failures must not churn a
+  workless cluster's clock forever).
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    FaultPlane, FaultProfile, Job, JobState, LatencyProfile, NodeState,
+    ResourceManager, ResourceRequest, Scheduler, SchedulerConfig, TaskState)
+from repro.workloads import MetricsTap, StreamingInjector, synthetic_stream
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
+                      completion_cost=1e-5, startup_cost=1e-3,
+                      cycle_interval=1e-3)
+
+# quick-cycling regimes: a ~30-virtual-second run sees each node fail,
+# rejoin, and often fail again
+CHURN = FaultProfile(name="churn", mtbf=30.0, mttr=3.0)
+SILENT = FaultProfile(name="silent", mtbf=60.0, mttr=8.0,
+                      silent_fraction=1.0)
+FLAKY = FaultProfile(name="flaky", flap_mtbf=25.0, flap_mttr=1.0)
+RACK = FaultProfile(name="rack", domain_size=8, domain_mtbf=60.0,
+                    domain_mttr=6.0)
+MUTE = FaultProfile(name="mute", mute_mtbf=40.0, mute_mttr=5.0)
+DEGRADED = FaultProfile(name="degraded", degrade_mtbf=30.0,
+                        degrade_mttr=10.0, degrade_factor=4.0)
+SINK = FaultProfile(name="sink", mtbf=60.0, mttr=5.0, silent_fraction=0.3,
+                    flap_mtbf=50.0, flap_mttr=1.0,
+                    domain_size=8, domain_mtbf=120.0, domain_mttr=6.0,
+                    mute_mtbf=80.0, mute_mttr=5.0,
+                    degrade_mtbf=60.0, degrade_mttr=10.0,
+                    degrade_factor=4.0)
+
+
+def fault_signature(s, jobs, tap, plane):
+    """Every observable the paths/replays must agree on."""
+    idmap = {j.job_id: i for i, j in enumerate(jobs)}
+    sig = {
+        "tasks": [(idmap[t.job_id], t.index, t.state, t.node_id, t.attempts,
+                   t.submit_time, t.dispatch_time, t.start_time, t.end_time)
+                  for j in jobs for t in j.tasks],
+        "jobs": [(idmap[j.job_id], j.state, j.completed_tasks,
+                  j.failed_tasks) for j in jobs],
+        "counters": (s.dispatched, s.completed, s.requeues, s.quarantined,
+                     s.lost_work_s, s.sched_clock, s.loop.now,
+                     s.rm.free_slots(), s.rm.total_slots()),
+        "tap": (tap.dispatches, tap.requeues, tap.jobs_done),
+    }
+    if plane is not None:
+        sig["plane"] = plane.summary()
+    return sig
+
+
+def run_chaos(wave, profile, fseed, *, nodes=24, n_jobs=60, wseed=5,
+              hb=0.0, hb_timeout=4.0, backoff=0.0, quarantine=0,
+              max_restarts=5):
+    rng = random.Random(wseed)
+    rm = ResourceManager(heartbeat_timeout=hb_timeout)
+    rm.add_nodes(nodes, slots=1)
+    cfg = SchedulerConfig(wave_batching=wave, heartbeat_interval=hb,
+                          retry_backoff=backoff,
+                          quarantine_after=quarantine)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    tap = MetricsTap().attach(s)
+    plane = (FaultPlane(s, profile, seed=fseed)
+             if profile is not None else None)
+    jobs = []
+    for _ in range(n_jobs):
+        n = rng.randint(1, 6)
+        j = Job.array(n, durations=[rng.random() * 4 for _ in range(n)])
+        j.max_restarts = max_restarts
+        jobs.append(j)
+        s.submit(j)
+    s.run()
+    return fault_signature(s, jobs, tap, plane)
+
+
+CHAOS_SCENARIOS = {
+    "churn": dict(profile=CHURN),
+    "churn_backoff": dict(profile=CHURN, backoff=0.5),
+    "churn_quarantine": dict(profile=CHURN, quarantine=2, backoff=0.25),
+    "silent": dict(profile=SILENT, hb=1.0),
+    "flaky": dict(profile=FLAKY),
+    "rack_outage": dict(profile=RACK),
+    "mute": dict(profile=MUTE, hb=1.0),
+    "degraded": dict(profile=DEGRADED),
+    "kitchen_sink": dict(profile=SINK, hb=1.0),
+}
+
+
+@pytest.mark.parametrize("fseed", [1, 2, 3])
+@pytest.mark.parametrize("name", sorted(CHAOS_SCENARIOS))
+def test_wave_matches_per_event_under_chaos(name, fseed):
+    kw = CHAOS_SCENARIOS[name]
+    assert (run_chaos(True, fseed=fseed, **kw)
+            == run_chaos(False, fseed=fseed, **kw))
+
+
+@pytest.mark.parametrize("fseed", [1, 2])
+def test_chaos_replay_is_deterministic(fseed):
+    a = run_chaos(True, CHURN, fseed, backoff=0.5)
+    b = run_chaos(True, CHURN, fseed, backoff=0.5)
+    assert a == b
+
+
+def test_idle_plane_is_free():
+    """A plane with nothing to inject must not perturb the engine at all:
+    bit-identical to running without one (the no-fault hot-path guarantee
+    behind keeping the committed bench cache byte-stable)."""
+    base = run_chaos(True, None, 0)
+    with_plane = run_chaos(True, FaultProfile(name="empty"), 0)
+    plane_sum = with_plane.pop("plane")
+    assert with_plane == base
+    assert all(v == 0 for v in plane_sum["injected"].values())
+
+
+def test_horizon_zero_injects_nothing():
+    base = run_chaos(True, None, 0)
+    sig = run_chaos(
+        True, FaultProfile(name="h0", mtbf=5.0, mttr=1.0, horizon=0.0), 1)
+    plane_sum = sig.pop("plane")
+    assert sig == base
+    assert plane_sum["injected"]["crash"] == 0
+
+
+def _stream_chaos(wave, profile, fseed, *, hb=0.0):
+    rm = ResourceManager(heartbeat_timeout=4.0)
+    rm.add_nodes(16, slots=1)
+    cfg = SchedulerConfig(wave_batching=wave, heartbeat_interval=hb,
+                          retry_backoff=0.25)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    tap = MetricsTap()
+
+    def with_restarts(specs):
+        for sp in specs:
+            sp.max_restarts = 4
+            yield sp
+
+    inj = StreamingInjector(
+        s, with_restarts(synthetic_stream(seed=9, rate=4.0, n_jobs=80)),
+        tap=tap)
+    plane = FaultPlane(s, profile, seed=fseed)
+    inj.run()
+    assert inj.drained
+    return (s.dispatched, s.completed, s.requeues, s.quarantined,
+            s.lost_work_s, s.sched_clock, s.loop.now, tap.dispatches,
+            tap.requeues, tap.jobs_done, plane.summary())
+
+
+@pytest.mark.parametrize("fseed", [1, 2, 3])
+def test_streaming_chaos_differential(fseed):
+    assert (_stream_chaos(True, CHURN, fseed)
+            == _stream_chaos(False, CHURN, fseed))
+
+
+def test_streaming_silent_differential():
+    assert (_stream_chaos(True, SILENT, 4, hb=1.0)
+            == _stream_chaos(False, SILENT, 4, hb=1.0))
+
+
+# --------------------------------------------------------------- liveness
+def test_plane_goes_quiet_after_drain():
+    """Once the workload drains, pending repairs are delivered but held
+    failures are not: the loop must end shortly after the last repair
+    instead of churning a workless cluster's clock forever."""
+    rm = ResourceManager()
+    rm.add_nodes(128, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    plane = FaultPlane(s, FaultProfile(name="q", mtbf=40.0, mttr=4.0),
+                       seed=3)
+    j = Job.array(256, 1.0)
+    j.max_restarts = 8
+    s.submit(j)
+    s.run()
+    assert j.state is JobState.COMPLETED
+    last_end = max(st.last_end for st in s.stats.values())
+    # repair tail: ~a dozen Exp(4 s) repairs past the drain, nowhere near
+    # the thousands of virtual seconds unbounded churn would add
+    assert s.loop.now < last_end + 60.0
+    # ...and every node healed (recoveries always delivered)
+    assert all(n.state is NodeState.UP for n in rm.nodes.values())
+    # held failures re-arm when work returns
+    crashes = plane.injected["crash"]
+    j2 = Job.array(256, 1.0)
+    j2.max_restarts = 8
+    s.submit(j2)
+    s.run()
+    assert j2.state is JobState.COMPLETED
+    assert plane.injected["crash"] >= crashes
+
+
+def test_silent_faults_require_sweeps():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST)   # heartbeat_interval defaults to 0
+    with pytest.raises(ValueError):
+        FaultPlane(s, FaultProfile(mtbf=10.0, silent_fraction=0.5))
+
+
+# ------------------------------------------------- heartbeat sweep timing
+def test_sweep_detection_latency_bounded():
+    """A silent death is detected by a sweep within
+    ``(heartbeat_timeout, heartbeat_timeout + interval]`` of the last beat
+    — detection latency is a measurable virtual-time quantity."""
+    rm = ResourceManager(heartbeat_timeout=3.0)
+    rm.add_nodes(8, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(heartbeat_interval=1.0))
+    detected = []
+    rm.on_node_down(lambda nid: detected.append((nid, s.loop.now)))
+    j = Job.array(24, 2.0)
+    j.max_restarts = 4
+    s.submit(j)
+    s.loop.at(0.5, rm.fail_silent, 3, 0.5)
+    s.run()
+    assert j.state is JobState.COMPLETED
+    assert [nid for nid, _ in detected] == [3]
+    t_det = detected[0][1]
+    assert 0.5 + 3.0 < t_det <= 0.5 + 3.0 + 1.0 + 0.5
+    # the suppressed lease came back exactly once
+    assert s.requeues == 1
+
+
+def test_mute_window_is_a_false_positive_then_heals():
+    """Heartbeat loss without death: the sweep requeues *live* work (a
+    false positive, counted as lost work) and the node rejoins on unmute."""
+    rm = ResourceManager(heartbeat_timeout=2.0)
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(heartbeat_interval=1.0))
+    j = Job.array(2, 10.0)
+    j.max_restarts = 3
+    s.submit(j)
+    s.run(until=0.5)
+    nid = j.tasks[0].node_id
+    rm.set_muted(nid, True, 0.5)
+    s.loop.at(6.0, rm.set_muted, nid, False, 6.0)
+    s.run()
+    assert j.state is JobState.COMPLETED
+    assert s.requeues == 1                    # live lease discarded once
+    assert s.lost_work_s > 0.0                # the work was real
+    assert j.tasks[0].attempts == 2
+    assert rm.nodes[nid].state is NodeState.UP
+
+
+# ------------------------------------------------------ retry lifecycle
+def test_backoff_delays_redispatch_exponentially():
+    rm = ResourceManager()
+    rm.add_nodes(1, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(retry_backoff=2.0))
+    j = Job.array(1, 5.0)
+    j.max_restarts = 3
+    s.submit(j)
+    task = j.tasks[0]
+    s.loop.at(1.0, s.fail_node, 0)
+    s.loop.at(1.5, rm.heartbeat, 0, 1.5)
+    s.run(until=2.0)
+    # first death at t=1: one attempt spent, in backoff limbo for
+    # 2.0 * 2^0 = 2 s — invisible to the pending counters
+    assert task.state is TaskState.BACKOFF
+    assert s._pending == 0
+    s.run(until=4.0)
+    assert task.state is TaskState.RUNNING
+    assert task.attempts == 2
+    assert task.start_time >= 3.0             # not before 1.0 + 2.0
+    # second death doubles the delay: 2.0 * 2^1 = 4 s
+    s.fail_node(0)
+    rm.heartbeat(0, s.loop.now)
+    t_fail2 = s.loop.now
+    s.run()
+    assert j.state is JobState.COMPLETED
+    assert task.attempts == 3
+    assert task.start_time >= t_fail2 + 4.0
+
+
+def test_quarantine_isolates_poison_task():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(quarantine_after=2))
+    j = Job.array(2, 10.0)
+    j.max_restarts = 10
+    s.submit(j)
+    s.run(until=1.0)
+    poison = j.tasks[0]
+    for _ in range(2):                 # two fault-coincident deaths
+        nid = poison.node_id
+        s.fail_node(nid)
+        rm.heartbeat(nid, s.loop.now)
+        s.run(until=s.loop.now + 1.0)
+    s.run()
+    assert poison.state is TaskState.QUARANTINED
+    assert s.quarantined == 1
+    assert j.tasks[1].state is TaskState.COMPLETED
+    assert j.state is JobState.FAILED  # default policy: any failure fails
+
+
+def test_fail_fast_cancels_siblings():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    j = Job.array(4, 5.0)
+    j.max_restarts = 0
+    j.failure_policy = "fail_fast"
+    s.submit(j)
+    # fail as a loop event so virtual time has really advanced to 1.0 and
+    # the cancelled RUNNING sibling has accrued discardable work
+    s.loop.at(1.0, lambda: s.fail_node(j.tasks[0].node_id))
+    s.run()
+    assert j.state is JobState.FAILED
+    assert j.tasks[0].state is TaskState.FAILED
+    assert all(t.state is TaskState.CANCELLED for t in j.tasks[1:])
+    assert s.lost_work_s > 0.0         # the cancelled RUNNING sibling
+
+
+def test_best_effort_completes_despite_permanent_failure():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    s = Scheduler(rm, profile=FAST)
+    j = Job.array(2, 5.0)
+    j.max_restarts = 0
+    j.failure_policy = "best_effort"
+    s.submit(j)
+    s.run(until=1.0)
+    s.fail_node(j.tasks[0].node_id)
+    s.run()
+    assert j.failed_tasks == 1
+    assert j.completed_tasks == 1
+    assert j.state is JobState.COMPLETED
+
+
+def test_degraded_node_stretches_payload():
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    rm.set_slow(0, 4.0)
+    s = Scheduler(rm, profile=FAST)
+    j = Job.array(2, 1.0)
+    s.submit(j)
+    s.run()
+    spans = sorted(t.end_time - t.start_time for t in j.tasks)
+    assert spans == pytest.approx([1.0, 4.0])
+
+
+# ------------------------------------------------------ license lifecycle
+def test_license_survives_node_death_mid_hold():
+    """Engine path: a licensed task's node dies mid-run; after retry and
+    completion every license credit is back — none double-freed, none
+    leaked (regression: ``release`` after ``mark_down`` used to be a
+    silent double-free risk, see ResourceManager._lic_holds)."""
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    rm.add_license("lic", 2)
+    s = Scheduler(rm, profile=FAST)
+    j = Job.array(6, 2.0, request=ResourceRequest(slots=1,
+                                                  licenses=("lic",)))
+    j.max_restarts = 3
+    s.submit(j)
+    s.run(until=1.0)
+    victim = next(t for t in j.tasks if t.state is TaskState.RUNNING)
+    s.fail_node(victim.node_id)
+    s.run()
+    assert j.state is JobState.COMPLETED
+    assert rm.licenses["lic"] == 2
+
+
+def test_license_release_is_exactly_once_per_hold():
+    rm = ResourceManager()
+    rm.add_nodes(1, slots=1)
+    rm.add_license("lic", 1)
+    j = Job.array(1, 1.0, request=ResourceRequest(slots=1,
+                                                  licenses=("lic",)))
+    task = j.tasks[0]
+    rm.allocate(task, 0)
+    assert rm.licenses["lic"] == 0
+    rm.release(task)
+    rm.release(task)                   # duplicate release: must be a no-op
+    assert rm.licenses["lic"] == 1
+    # a second hold re-arms the credit guard
+    rm.allocate(task, 0)
+    rm.release(task)
+    assert rm.licenses["lic"] == 1
+
+
+def test_license_returns_once_when_node_dies_holding_it():
+    """mark_down clears the node-side running set; the license hold set is
+    what keeps the later engine-side release from double-crediting."""
+    rm = ResourceManager()
+    rm.add_nodes(2, slots=1)
+    rm.add_license("lic", 1)
+    j = Job.array(1, 1.0, request=ResourceRequest(slots=1,
+                                                  licenses=("lic",)))
+    task = j.tasks[0]
+    rm.allocate(task, 0)
+    rm.mark_down(0)                    # node dies holding the license
+    rm.release(task)                   # engine requeue path releases once
+    assert rm.licenses["lic"] == 1
+    rm.release(task)                   # any stale duplicate stays a no-op
+    assert rm.licenses["lic"] == 1
