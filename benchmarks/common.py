@@ -47,18 +47,24 @@ STREAM_ACTIVE_JOBS = 8
 def run_taskset(family: str, n: int, t: float, multilevel: bool = False,
                 seed: int = 0, processors: int = P,
                 wave_tasks: int = 0, max_active_jobs: int = 0,
-                tap: Optional[MetricsTap] = None) -> Dict:
+                tap: Optional[MetricsTap] = None,
+                attach=None) -> Dict:
     """One Table-9 run; returns T_total, Delta-T and utilization.
 
     ``processors`` scales the paper's grid beyond its P=1408 (the 100k-slot
     runs fit (t_s, alpha_s) at P >= 100,000).  ``wave_tasks``/
     ``max_active_jobs`` stream the set in bounded waves (see module
     docstring); 0/0 reproduces the paper's single-array submission exactly.
+    ``attach`` (a callable taking the Scheduler) installs extra observers —
+    e.g. an ``obs.FlightRecorder`` — before any job is submitted; pure
+    observation, so the row must reproduce the committed cache exactly.
     """
     prof = FAMILIES[family]
     rm = ResourceManager()
     rm.add_nodes(processors, slots=1)
     s = Scheduler(rm, profile=prof)
+    if attach is not None:
+        attach(s)
     transform = None
     if multilevel:
         transform = lambda job: aggregate(  # noqa: E731

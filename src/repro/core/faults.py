@@ -91,6 +91,10 @@ _CRASH, _REPAIR, _FLAP, _FLAP_END, _DOM_FAIL, _DOM_REPAIR, \
 
 _RECOVERY = frozenset((_REPAIR, _FLAP_END, _DOM_REPAIR, _UNMUTE, _RESTORE))
 
+#: stable wire names for the event kinds (flight-recorder / registry feed)
+KIND_NAMES = ("crash", "repair", "flap", "flap_end", "domain_fail",
+              "domain_repair", "mute", "unmute", "degrade", "restore")
+
 
 class FaultPlane:
     """Inject a :class:`FaultProfile` into a scheduler's event loop.
@@ -158,6 +162,11 @@ class FaultPlane:
             for d in range(n_domains):
                 self._push(start + self._exp(p.domain_mtbf), _DOM_FAIL, d)
         # ------------------------------------------------------- wiring
+        #: observability hook: ``on_event(now, kind_name, entity_id)`` fires
+        #: for every delivered fault event, after its effect is applied.
+        #: None-checked like the scheduler hooks — unobserved planes pay one
+        #: comparison per event.
+        self.on_event = None
         self.rm.on_node_down(self._on_down)
         self.rm.on_node_up(self._on_up)
         sch.loop.add_source(self._refill)
@@ -279,6 +288,8 @@ class FaultPlane:
             self.rm.set_slow(ent, 1.0)
             self._push(now + self._exp(self.profile.degrade_mtbf),
                        _DEGRADE, ent)
+        if self.on_event is not None:
+            self.on_event(now, KIND_NAMES[kind], ent)
         self._maybe_arm()
 
     # ------------------------------------------------------------- effects

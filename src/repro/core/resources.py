@@ -229,6 +229,7 @@ class ResourceManager:
         self.heartbeat_timeout = heartbeat_timeout
         self._down_callbacks = []
         self._up_callbacks = []
+        self._mute_callbacks = []
         # incremental aggregates over UP nodes
         self._up_ids: Set[int] = set()
         self._up_cache: Optional[List[Node]] = None
@@ -340,6 +341,11 @@ class ResourceManager:
     def on_node_up(self, callback) -> None:
         self._up_callbacks.append(callback)
 
+    def on_node_mute(self, callback) -> None:
+        """Observe mute transitions: ``callback(node_id, muted)`` fires on
+        every actual state change (``set_muted`` no-ops are not reported)."""
+        self._mute_callbacks.append(callback)
+
     def sweep_heartbeats(self, now: float) -> List[int]:
         """One heartbeat-sweep round (scheduler-driven when
         ``SchedulerConfig.heartbeat_interval > 0``): responsive nodes are
@@ -372,6 +378,8 @@ class ResourceManager:
         if node.muted == muted:
             return
         node.muted = muted
+        for cb in self._mute_callbacks:
+            cb(node_id, muted)
         if not muted:
             # beats resume: rejoin if the lapse was already "detected"
             self.heartbeat(node_id, now)

@@ -188,6 +188,17 @@ class Scheduler:
         self.on_job_done: Optional[Callable[[Job], None]] = None
         self.on_submit: Optional[Callable[[Job], None]] = None
         self.on_requeue: Optional[Callable[[Task, float], None]] = None
+        # observability-plane hooks (src/repro/obs/): task completion
+        # (fires per task on both dispatch paths, in per-event order),
+        # scheduling-cycle entry, poison-task quarantine, job eligibility
+        # (enqueue at submit / dependency release), and heartbeat sweeps.
+        # All None-checked like the hooks above: an unobserved run pays one
+        # comparison per event and nothing else.
+        self.on_complete: Optional[Callable[[Task, bool], None]] = None
+        self.on_cycle: Optional[Callable[[float, int], None]] = None
+        self.on_quarantine: Optional[Callable[[Task, float], None]] = None
+        self.on_job_ready: Optional[Callable[[Job], None]] = None
+        self.on_sweep: Optional[Callable[[float, List[int]], None]] = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
 
@@ -238,6 +249,8 @@ class Scheduler:
                          self._heartbeat_sweep)
         if self.on_submit is not None:
             self.on_submit(job)
+        if self.on_job_ready is not None and job.state is not JobState.PENDING:
+            self.on_job_ready(job)     # eligible at submit (no unmet deps)
 
     # ------------------------------------------------ pending accounting
     def _count_in(self, job: Job) -> None:
@@ -280,6 +293,8 @@ class Scheduler:
 
     def _cycle(self) -> None:
         self._next_cycle = None
+        if self.on_cycle is not None:
+            self.on_cycle(self.loop.now, self._depth)
         if self._fast and self._all_unit():
             self._cycle_fast()
         else:
@@ -624,6 +639,12 @@ class Scheduler:
         # dispatched with speculation off, so skip it unless the config
         # flipped mid-flight (then the per-event fallback keeps it warm)
         durations = self._durations if self.config.speculative else None
+        # completion observer, hoisted like the other loop-invariant hooks.
+        # It fires per drained member in exact per-event order; observers
+        # must read task-intrinsic fields (end_time, node_id, ...) — the
+        # drain's scalar state (sched_clock, completed, loop.now) is
+        # deferred and only flushed at yields/retires.
+        on_complete = self.on_complete
         # fault-plane state, hoisted: silent deaths and sweeps only change
         # between events, and the drain yields to every event, so these are
         # loop-invariant within one call (no-fault runs pay two comparisons)
@@ -719,6 +740,8 @@ class Scheduler:
             if durations is not None:
                 durations.append(max(e - task.start_time, 1e-9))
                 self._dur_version += 1
+            if on_complete is not None:
+                on_complete(task, True)
             jid = task.job_id
             if jid != jid_cache:
                 job = active.get(jid)
@@ -908,6 +931,8 @@ class Scheduler:
         self.completed += 1
         self._durations.append(max(now - task.start_time, 1e-9))
         self._dur_version += 1
+        if self.on_complete is not None:
+            self.on_complete(task, ok)
         job = self._active_jobs.get(task.job_id)
         if job is None:
             return
@@ -951,6 +976,8 @@ class Scheduler:
         for dep in released:
             self._depth += dep.n_tasks - self._cursor.get(dep.job_id, 0)
             self._count_in(dep)
+            if self.on_job_ready is not None:
+                self.on_job_ready(dep)   # dependency release: now eligible
         if not self._unit.pop(job.job_id, True):
             self._nonunit -= 1
         self._cursor.pop(job.job_id, None)
@@ -984,7 +1011,9 @@ class Scheduler:
         goes quiet when idle and is re-armed by the next ``submit``, so an
         idle engine's event loop can still drain."""
         self._sweep_armed = False
-        self.rm.sweep_heartbeats(self.loop.now)
+        newly_down = self.rm.sweep_heartbeats(self.loop.now)
+        if self.on_sweep is not None:
+            self.on_sweep(self.loop.now, newly_down)
         if self._active_jobs:
             self._sweep_armed = True
             self.loop.at(self.loop.now + self.config.heartbeat_interval,
@@ -1082,6 +1111,8 @@ class Scheduler:
                 t.state = TaskState.QUARANTINED
                 self.quarantined += 1
                 job.failed_tasks += 1
+                if self.on_quarantine is not None:
+                    self.on_quarantine(t, now)
                 touched.append(job)
             elif t.attempts <= job.max_restarts:
                 self._requeue_task(t, now)

@@ -6,6 +6,14 @@ long the run is — scalar accumulators, a fixed-size reservoir for latency
 percentiles, and a stride-doubling time series (when the buffer fills, every
 other point is dropped and the sampling stride doubles), so a 100M-dispatch
 run costs the same memory as a 10k one.
+
+The tap is a thin view over a :class:`repro.obs.registry.Registry`: its
+instruments (dispatch counter, latency histogram, depth/utilization/requeue
+series) live in the registry under ``tap.*`` names, where dashboards and
+snapshots can read them alongside engine gauges; the tap's historical
+attributes (``dispatches``, ``latency_sum``, ``depth_series``...) are reads
+of those same instruments, and ``summary()`` is schema-stable
+byte-for-byte.
 """
 from __future__ import annotations
 
@@ -17,27 +25,37 @@ from repro.core.scheduler import Scheduler
 
 
 class Reservoir:
-    """Vitter's algorithm R over a float stream; exact below ``size``."""
+    """Vitter's algorithm R over a float stream; exact below ``size``.
+
+    The sorted view is computed on the first ``percentile`` call and cached
+    until the next ``add`` — ``summary()`` reads three percentiles, one
+    sort.
+    """
 
     def __init__(self, size: int = 4096, seed: int = 0):
         self.size = size
         self.seen = 0
         self._rng = random.Random(seed)
         self._buf: List[float] = []
+        self._sorted: Optional[List[float]] = None
 
     def add(self, x: float) -> None:
         self.seen += 1
         if len(self._buf) < self.size:
             self._buf.append(x)
+            self._sorted = None
         else:
             j = self._rng.randrange(self.seen)
             if j < self.size:
                 self._buf[j] = x
+                self._sorted = None
 
     def percentile(self, q: float) -> float:
         if not self._buf:
             return 0.0
-        s = sorted(self._buf)
+        s = self._sorted
+        if s is None:
+            s = self._sorted = sorted(self._buf)
         idx = min(int(q / 100.0 * len(s)), len(s) - 1)
         return s[idx]
 
@@ -68,20 +86,28 @@ class MetricsTap:
     commitment minus task submit time (virtual seconds).  Queue depth and
     slot utilization are sampled on every dispatch/retire event through the
     stride-doubling series.
+
+    ``attach`` raises if the tap is already attached (re-attaching would
+    self-chain the hooks into an infinite replay); ``detach`` restores the
+    exact hook chain that ``attach`` found, provided the tap is still the
+    outermost subscriber on each hook it owns.
     """
 
-    def __init__(self, *, reservoir: int = 4096, max_points: int = 2048):
-        self.dispatches = 0
-        self.latency_sum = 0.0
-        self.latency_max = 0.0
-        self._lat = Reservoir(reservoir)
-        self.depth_series = TimeSeries(max_points)
-        self.util_series = TimeSeries(max_points)
-        self.jobs_done = 0
-        # failure/recovery accounting (fault plane / retry lifecycle)
-        self.requeues = 0
-        self.requeue_series = TimeSeries(max_points)
-        self.lost_work_series = TimeSeries(max_points)
+    def __init__(self, *, reservoir: int = 4096, max_points: int = 2048,
+                 registry=None):
+        # local import keeps the package import graph acyclic (obs.registry
+        # lazily reuses Reservoir/TimeSeries from this module)
+        from repro.obs.registry import Registry
+        self.registry = registry if registry is not None else Registry()
+        r = self.registry
+        self._disp = r.counter("tap.dispatches")
+        self._done = r.counter("tap.jobs_done")
+        self._rq = r.counter("tap.requeues")
+        self._lat = r.histogram("tap.dispatch_latency_s", size=reservoir)
+        self.depth_series = r.series("tap.queue_depth", max_points)
+        self.util_series = r.series("tap.utilization", max_points)
+        self.requeue_series = r.series("tap.requeue_count", max_points)
+        self.lost_work_series = r.series("tap.lost_work_s", max_points)
         self._sch: Optional[Scheduler] = None
         self._chain_dispatch = None
         self._chain_dispatch_batch = None
@@ -89,8 +115,38 @@ class MetricsTap:
         self._chain_requeue = None
         self._bound_dispatch = None
         self._bound_batch = None
+        self._bound_done = None
+        self._bound_requeue = None
 
+    # ------------------------------------------------- legacy attributes
+    # (thin-view reads of the registry instruments; the public API and
+    # every historical consumer keep working unchanged)
+    @property
+    def dispatches(self) -> int:
+        return self._disp.value
+
+    @property
+    def jobs_done(self) -> int:
+        return self._done.value
+
+    @property
+    def requeues(self) -> int:
+        return self._rq.value
+
+    @property
+    def latency_sum(self) -> float:
+        return self._lat.sum
+
+    @property
+    def latency_max(self) -> float:
+        return self._lat.max
+
+    # ---------------------------------------------------- attach/detach
     def attach(self, sch: Scheduler) -> "MetricsTap":
+        if self._sch is not None:
+            raise RuntimeError(
+                "MetricsTap is already attached; call detach() first "
+                "(re-attaching would self-chain its hooks)")
         self._sch = sch
         self._chain_dispatch = sch.on_dispatch
         self._chain_dispatch_batch = sch.on_dispatch_batch
@@ -101,21 +157,51 @@ class MetricsTap:
         # _on_dispatch_batch)
         self._bound_dispatch = self._on_dispatch
         self._bound_batch = self._on_dispatch_batch
+        self._bound_done = self._on_job_done
+        self._bound_requeue = self._on_requeue
         sch.on_dispatch = self._bound_dispatch
         sch.on_dispatch_batch = self._bound_batch
-        sch.on_job_done = self._on_job_done
+        sch.on_job_done = self._bound_done
         self._chain_requeue = sch.on_requeue
-        sch.on_requeue = self._on_requeue
+        sch.on_requeue = self._bound_requeue
+        return self
+
+    def detach(self) -> "MetricsTap":
+        """Restore the exact prior hook chain and release the scheduler.
+
+        Only the *outermost* subscriber can detach: if a later observer
+        chained (or clobbered) on top of this tap, popping the tap out of
+        the middle would orphan it, so ``detach`` raises instead.
+        """
+        sch = self._sch
+        if sch is None:
+            return self
+        installed = (
+            ("on_dispatch", self._bound_dispatch, self._chain_dispatch),
+            ("on_dispatch_batch", self._bound_batch,
+             self._chain_dispatch_batch),
+            ("on_job_done", self._bound_done, self._chain_done),
+            ("on_requeue", self._bound_requeue, self._chain_requeue),
+        )
+        for attr, ours, _ in installed:
+            if getattr(sch, attr) is not ours:
+                raise RuntimeError(
+                    f"cannot detach: a later subscriber replaced {attr}; "
+                    "detach observers outermost-first")
+        for attr, _, prior in installed:
+            setattr(sch, attr, prior)
+        self._sch = None
+        self._chain_dispatch = self._chain_dispatch_batch = None
+        self._chain_done = self._chain_requeue = None
+        self._bound_dispatch = self._bound_batch = None
+        self._bound_done = self._bound_requeue = None
         return self
 
     # ------------------------------------------------------------ hooks
     def _on_dispatch(self, task: Task, queue_depth: int) -> None:
         sch = self._sch
         lat = max(task.dispatch_time - task.submit_time, 0.0)
-        self.dispatches += 1
-        self.latency_sum += lat
-        if lat > self.latency_max:
-            self.latency_max = lat
+        self._disp.value += 1
         self._lat.add(lat)
         now = sch.loop.now
         self.depth_series.add(now, float(queue_depth))
@@ -140,21 +226,18 @@ class MetricsTap:
         total = sch.rm.total_slots()
         free_end = sch.rm.free_slots()
         m = len(tasks)
+        # per-task adds (not a local partial sum) keep the histogram's
+        # float accumulation bit-identical to per-event observation
         lat_add = self._lat.add
         depth_add = self.depth_series.add
         util_add = self.util_series.add
         for i, task in enumerate(tasks):
             lat = max(task.dispatch_time - task.submit_time, 0.0)
-            # accumulate per task (not via a local partial sum) so the
-            # float result is bit-identical to per-event observation
-            self.latency_sum += lat
-            if lat > self.latency_max:
-                self.latency_max = lat
             lat_add(lat)
             depth_add(now, float(depths[i]))
             if total:
                 util_add(now, 1.0 - (free_end + (m - 1 - i)) / total)
-        self.dispatches += m
+        self._disp.value += m
         # per-task replay: attaching the tap put the engine on the wave
         # path, which never calls on_dispatch — so per-task subscribers
         # must be replayed here or they silently observe nothing.
@@ -175,15 +258,15 @@ class MetricsTap:
                 replay(task, depths[i])
 
     def _on_job_done(self, job: Job) -> None:
-        self.jobs_done += 1
+        self._done.value += 1
         if self._chain_done is not None:
             self._chain_done(job)
 
     def _on_requeue(self, task: Task, now: float) -> None:
         """Fault-lifecycle hook: fires once per requeue decision (immediate
         or backoff), never on the no-fault hot path."""
-        self.requeues += 1
-        self.requeue_series.add(now, float(self.requeues))
+        self._rq.value += 1
+        self.requeue_series.add(now, float(self._rq.value))
         self.lost_work_series.add(now, self._sch.lost_work_s)
         if self._chain_requeue is not None:
             self._chain_requeue(task, now)

@@ -1,0 +1,523 @@
+"""Observability-plane suite: flight recorder, registry, profiler,
+dashboard, and the MetricsTap hook-chain contracts.
+
+Pinning layers:
+
+* **Differential recording** — the flight recorder's event stream must be
+  bit-identical between the wave-batched and per-event dispatch paths,
+  over the wavepath scenario matrix and the fault-plane chaos matrix
+  (timestamps, ordering, every field).
+* **Observation is free** — attaching a recorder must not perturb the
+  engine at all: the committed ``experiments/bench_cache.json`` row must
+  still reproduce exactly with a recorder attached.
+* **Hook-chain ordering** — the subscriber-clobber replay logic in
+  ``MetricsTap._on_dispatch_batch`` (attach-before vs attach-after, inner
+  tap), and the new ``detach`` / double-``attach`` contracts.
+* **Export** — Chrome-trace round-trip: record -> export -> re-parse ->
+  counts and schema survive.
+"""
+import io
+import json
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    FaultPlane, Job, LatencyProfile, ResourceManager, Scheduler,
+    SchedulerConfig)
+from repro.obs import (
+    Dashboard, FlightRecorder, Registry, SelfProfiler)
+from repro.obs.dashboard import sparkline
+from repro.workloads import MetricsTap, Reservoir
+
+from test_faultplane import CHAOS_SCENARIOS
+from test_wavepath import SCENARIOS, engine_signature
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
+                      completion_cost=1e-5, startup_cost=1e-3,
+                      cycle_interval=1e-3)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+# --------------------------------------------------------------- harness
+def _submit_workload(s, rng, n_jobs, *, max_restarts=2, prio=False,
+                     mixed=True, deps=False, zero_dur=False, jobs=None):
+    jobs = [] if jobs is None else jobs
+    for _ in range(n_jobs):
+        n = rng.randint(1, 6)
+        if zero_dur:
+            durs = [0.0 if rng.random() < 0.5 else 0.25 for _ in range(n)]
+        elif mixed:
+            durs = [rng.random() * 2 for _ in range(n)]
+        else:
+            durs = [0.5] * n
+        j = Job.array(n, durations=durs,
+                      priority=float(rng.randint(0, 3)) if prio else 0.0)
+        j.max_restarts = max_restarts
+        if deps and jobs and rng.random() < 0.3:
+            j.depends_on = (rng.choice(jobs).job_id,)
+        jobs.append(j)
+        s.submit(j)
+    return jobs
+
+
+def record_scenario(wave, *, seed=0, nodes=12, slots=1, n_jobs=40, fail=(),
+                    rejoin=(), cap=0, prio=False, mixed=False, stepped=0.0,
+                    deps=False, zero_dur=False, with_tap=False):
+    """test_wavepath.run_scenario with a FlightRecorder attached first."""
+    rng = random.Random(seed)
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots)
+    cfg = SchedulerConfig(wave_batching=wave, max_dispatch_per_cycle=cap)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    rec = FlightRecorder().attach(s)
+    tap = MetricsTap().attach(s) if with_tap else None
+    jobs = _submit_workload(s, rng, n_jobs, prio=prio, mixed=mixed,
+                            deps=deps, zero_dur=zero_dur)
+    s.loop.at_many(
+        [(t_fail, s.fail_node, (nid,)) for t_fail, nid in fail]
+        + [(t_up, rm.heartbeat, (nid, t_up)) for t_up, nid in rejoin])
+    if stepped:
+        until = 0.0
+        for _ in range(40):
+            until += stepped
+            s.run(until=until)
+    s.run()
+    idmap = {j.job_id: i for i, j in enumerate(jobs)}
+    out = {"events": rec.events_normalized(idmap),
+           "counts": rec.counts(),
+           "engine": engine_signature(s, jobs, idmap)}
+    if tap is not None:
+        out["tap"] = tap.summary()
+    return out
+
+
+def record_chaos(wave, profile, fseed, *, nodes=24, n_jobs=60, wseed=5,
+                 hb=0.0, backoff=0.0, quarantine=0):
+    """test_faultplane.run_chaos with recorder + tap + fault feed."""
+    rng = random.Random(wseed)
+    rm = ResourceManager(heartbeat_timeout=4.0)
+    rm.add_nodes(nodes, slots=1)
+    cfg = SchedulerConfig(wave_batching=wave, heartbeat_interval=hb,
+                          retry_backoff=backoff,
+                          quarantine_after=quarantine)
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    rec = FlightRecorder().attach(s)
+    tap = MetricsTap().attach(s)
+    plane = FaultPlane(s, profile, seed=fseed)
+    rec.attach_faults(plane)
+    jobs = []
+    for _ in range(n_jobs):     # same workload shape as run_chaos
+        n = rng.randint(1, 6)
+        j = Job.array(n, durations=[rng.random() * 4 for _ in range(n)])
+        j.max_restarts = 5
+        jobs.append(j)
+        s.submit(j)
+    s.run()
+    idmap = {j.job_id: i for i, j in enumerate(jobs)}
+    return {"events": rec.events_normalized(idmap),
+            "counts": rec.counts(),
+            "tap": tap.summary(),
+            "plane": plane.summary()}
+
+
+# ------------------------------------------------- differential recording
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_recorder_differential_scenarios(name, seed):
+    kw = SCENARIOS[name]
+    a = record_scenario(False, seed=seed, **kw)
+    b = record_scenario(True, seed=seed, **kw)
+    assert a == b
+
+
+@pytest.mark.parametrize("name", sorted(CHAOS_SCENARIOS))
+@pytest.mark.parametrize("fseed", [1, 2])
+def test_recorder_differential_chaos(name, fseed):
+    kw = dict(CHAOS_SCENARIOS[name])
+    profile = kw.pop("profile")
+    a = record_chaos(True, profile, fseed, **kw)
+    b = record_chaos(False, profile, fseed, **kw)
+    assert a == b
+
+
+def test_recorder_with_and_without_tap_identical():
+    """The recorder's stream must not depend on whether a tap is chained
+    on top of it (composition changes nothing observable)."""
+    alone = record_scenario(True, seed=3, mixed=True)
+    chained = record_scenario(True, seed=3, mixed=True, with_tap=True)
+    assert alone["events"] == chained["events"]
+    assert alone["engine"] == chained["engine"]
+
+
+def test_recorder_lifecycle_kinds_present():
+    out = record_chaos(True, CHAOS_SCENARIOS["kitchen_sink"]["profile"], 3,
+                       hb=1.0, backoff=0.25, quarantine=2)
+    counts = out["counts"]
+    for kind in ("submit", "ready", "cycle", "dispatch", "complete",
+                 "job_done", "node_down", "node_up", "sweep", "fault"):
+        assert counts.get(kind, 0) > 0, (kind, counts)
+    # every complete carries its dispatch time in aux, and they pair up
+    for t, kind, job, task, node, aux in out["events"]:
+        if kind == "complete":
+            assert aux <= t and node >= 0
+
+
+def test_recorder_ring_bound_and_double_attach():
+    rec = FlightRecorder(capacity=32)
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(wave_batching=True))
+    rec.attach(s)
+    with pytest.raises(RuntimeError):
+        rec.attach(s)
+    _submit_workload(s, random.Random(0), 30)
+    s.run()
+    assert len(rec.events) == 32            # ring clamped
+    assert rec.recorded > 32
+    assert rec.dropped == rec.recorded - 32
+
+
+# --------------------------------------------------- observation is free
+def test_bench_cache_reproduces_with_recorder_attached():
+    """Acceptance: the committed bench-cache row still reproduces exactly
+    with a flight recorder (full hook set) attached — observation costs
+    the engine nothing, bit for bit."""
+    cache_path = ROOT / "experiments" / "bench_cache.json"
+    cache = json.loads(cache_path.read_text())
+    key = "slurm|8|30.0|0|0"
+    assert key in cache
+    sys.path.insert(0, str(ROOT / "benchmarks"))
+    try:
+        from common import run_taskset
+    finally:
+        sys.path.pop(0)
+    rec = FlightRecorder()
+    row = run_taskset("slurm", 8, 30.0, attach=rec.attach)
+    for field in ("T_total", "delta_t", "utilization"):
+        assert row[field] == cache[key][field], (field, row, cache[key])
+    counts = rec.counts()
+    assert counts["dispatch"] == counts["complete"] == 8 * 1408
+
+
+# ------------------------------------------------------------- hook chain
+def _small_engine(wave=True):
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(wave_batching=wave))
+    return s
+
+
+def _run_jobs(s, n_jobs=6, seed=0):
+    jobs = _submit_workload(s, random.Random(seed), n_jobs, mixed=True)
+    s.run()
+    return jobs
+
+
+def test_tap_replays_subscriber_attached_before():
+    """A per-task subscriber installed *before* the tap keeps observing on
+    the wave path (the tap replays its chained hook), in per-event order."""
+    per_event = []
+    s = _small_engine(wave=False)
+    s.on_dispatch = lambda t, d: per_event.append((t.index, d))
+    MetricsTap().attach(s)
+    _run_jobs(s)
+
+    wave = []
+    s2 = _small_engine(wave=True)
+    s2.on_dispatch = lambda t, d: wave.append((t.index, d))
+    tap2 = MetricsTap().attach(s2)
+    _run_jobs(s2)
+    assert wave == per_event and wave
+    assert tap2.dispatches == len(wave)
+
+
+def test_tap_replays_subscriber_attached_after():
+    """A per-task subscriber that *clobbers* the tap's on_dispatch after
+    attach is detected by identity and replayed on the wave path."""
+    per_event = []
+    s = _small_engine(wave=False)
+    MetricsTap().attach(s)
+    s.on_dispatch = lambda t, d: per_event.append((t.index, d))
+    _run_jobs(s)
+
+    wave = []
+    s2 = _small_engine(wave=True)
+    tap2 = MetricsTap().attach(s2)
+    s2.on_dispatch = lambda t, d: wave.append((t.index, d))
+    _run_jobs(s2)
+    assert wave == per_event and wave
+    assert tap2.dispatches == len(wave)
+
+
+def test_inner_tap_replay():
+    """Tap over tap: both observe every dispatch exactly once, on either
+    path (the outer chains the inner's batch hook; the inner replays its
+    own chain)."""
+    results = {}
+    for wave in (False, True):
+        s = _small_engine(wave=wave)
+        inner = MetricsTap().attach(s)
+        outer = MetricsTap().attach(s)
+        _run_jobs(s)
+        assert inner.dispatches == outer.dispatches > 0
+        results[wave] = (inner.summary(), outer.summary())
+    assert results[False] == results[True]
+
+
+def test_double_attach_raises():
+    s = _small_engine()
+    tap = MetricsTap().attach(s)
+    with pytest.raises(RuntimeError):
+        tap.attach(s)
+    with pytest.raises(RuntimeError):
+        tap.attach(_small_engine())
+
+
+def test_detach_restores_exact_chain():
+    s = _small_engine()
+    prior = []
+    s.on_dispatch = lambda t, d: prior.append(t.index)
+    before = (s.on_dispatch, s.on_dispatch_batch, s.on_job_done,
+              s.on_requeue)
+    tap = MetricsTap().attach(s)
+    assert s.on_dispatch is not before[0]
+    tap.detach()
+    assert (s.on_dispatch, s.on_dispatch_batch, s.on_job_done,
+            s.on_requeue) == before
+    # detached tap is re-attachable and detach is idempotent
+    tap.detach()
+    tap.attach(s)
+    _run_jobs(s)
+    assert tap.dispatches > 0
+
+
+def test_detach_not_outermost_raises():
+    s = _small_engine()
+    inner = MetricsTap().attach(s)
+    MetricsTap().attach(s)          # outer now owns the hooks
+    with pytest.raises(RuntimeError):
+        inner.detach()
+
+
+def test_detached_tap_stops_counting():
+    s = _small_engine()
+    tap = MetricsTap().attach(s)
+    tap.detach()
+    _run_jobs(s)
+    assert tap.dispatches == 0
+
+
+# ------------------------------------------------------------- reservoir
+def test_reservoir_percentile_cache_invalidates_on_add():
+    r = Reservoir(size=8, seed=1)
+    for x in (5.0, 1.0, 3.0):
+        r.add(x)
+    assert r.percentile(0) == 1.0 and r.percentile(100) == 5.0
+    r.add(0.5)                     # must invalidate the cached sorted view
+    assert r.percentile(0) == 0.5
+    # overflow path (replacement) invalidates too
+    rng_r = Reservoir(size=4, seed=0)
+    for x in range(4):
+        rng_r.add(float(x))
+    assert rng_r.percentile(100) == 3.0
+    for x in range(100, 160):
+        rng_r.add(float(x))
+    assert rng_r.percentile(100) >= 100.0
+
+
+def test_reservoir_matches_unsorted_reference():
+    """Cached-percentile results are identical to a sort-every-call
+    implementation over a random stream (including replacements)."""
+    rng = random.Random(7)
+    r = Reservoir(size=32, seed=3)
+    ref_buf = []
+    ref_rng = random.Random(3)
+    seen = 0
+    for _ in range(500):
+        x = rng.random()
+        r.add(x)
+        seen += 1
+        if len(ref_buf) < 32:
+            ref_buf.append(x)
+        else:
+            j = ref_rng.randrange(seen)
+            if j < 32:
+                ref_buf[j] = x
+        if seen % 37 == 0:
+            s = sorted(ref_buf)
+            for q in (0, 50, 99, 100):
+                idx = min(int(q / 100.0 * len(s)), len(s) - 1)
+                assert r.percentile(q) == s[idx]
+
+
+# -------------------------------------------------------------- registry
+def test_registry_instruments_and_snapshot():
+    reg = Registry()
+    c = reg.counter("c")
+    c.inc()
+    c.inc(3)
+    assert reg.counter("c") is c and c.value == 4
+    g = reg.gauge("g")
+    g.set(2.5)
+    h = reg.histogram("h", size=16)
+    for x in (1.0, 2.0, 3.0):
+        h.add(x)
+    assert h.count == 3 and h.sum == 6.0 and h.max == 3.0 and h.mean == 2.0
+    ts = reg.series("s", max_points=8)
+    ts.add(0.0, 1.0)
+    snap = reg.snapshot()
+    assert snap["c"] == 4 and snap["g"] == 2.5
+    assert snap["h"]["count"] == 3 and snap["h"]["max"] == 3.0
+    assert snap["s"] == [(0.0, 1.0)]
+    with pytest.raises(TypeError):
+        reg.gauge("c")              # kind mismatch
+    bound = reg.gauge("fn", fn=lambda: 42)
+    assert bound.read() == 42
+    with pytest.raises(TypeError):
+        bound.set(1)
+
+
+def test_registry_binds_engine_state():
+    s = _small_engine()
+    reg = Registry().bind_scheduler(s).bind_resources(s.rm)
+    assert reg.get("sched.dispatched").read() == 0
+    assert reg.get("rm.total_slots").read() == 4
+    _run_jobs(s)
+    snap = reg.snapshot()
+    assert snap["sched.dispatched"] == s.dispatched > 0
+    assert snap["sched.completed"] == s.completed
+    assert snap["rm.occupancy"] == 0.0      # drained
+
+
+def test_tap_is_a_registry_view():
+    s = _small_engine()
+    tap = MetricsTap().attach(s)
+    _run_jobs(s)
+    snap = tap.registry.snapshot()
+    assert snap["tap.dispatches"] == tap.dispatches > 0
+    assert snap["tap.jobs_done"] == tap.jobs_done == 6
+    assert snap["tap.dispatch_latency_s"]["count"] == tap.dispatches
+    assert snap["tap.queue_depth"] == tap.depth_series.points
+
+
+# -------------------------------------------------------------- profiler
+def test_profiler_attributes_time_and_detaches():
+    s = _small_engine()
+    prof = SelfProfiler().attach(s)
+    with pytest.raises(RuntimeError):
+        prof.attach(s)
+    jobs = _run_jobs(s, n_jobs=10)
+    rep = prof.report()
+    for phase in ("admission", "cycle", "dispatch", "completion"):
+        assert rep[phase]["calls"] > 0, rep
+        assert rep[phase]["self_s"] >= 0.0
+    assert rep["admission"]["calls"] == 10
+    assert prof.total_s > 0.0
+    assert abs(sum(p["fraction"] for p in rep.values()) - 1.0) < 1e-9
+    prof.detach()
+    # instance wrappers removed: class methods restored
+    assert "submit" not in vars(s) and "_cycle" not in vars(s)
+    before = prof.stats["admission"].calls
+    s2 = _small_engine()
+    s2.submit(Job.array(1, durations=[0.1]))
+    s2.run()
+    assert prof.stats["admission"].calls == before
+
+
+def test_profiler_does_not_perturb_engine():
+    """Profiled and unprofiled runs are observably identical (virtual
+    time never sees the wall-clock instrumentation)."""
+    def run(profiled):
+        s = _small_engine()
+        prof = SelfProfiler(stride=2).attach(s) if profiled else None
+        jobs = _run_jobs(s, n_jobs=8, seed=4)
+        return engine_signature(s, jobs)
+    assert run(False) == run(True)
+
+
+def test_profiler_stride_samples_subset():
+    s = _small_engine()
+    prof = SelfProfiler(stride=4).attach(s)
+    _run_jobs(s, n_jobs=12)
+    st = prof.stats["completion"]
+    assert st.calls > 0 and st.sampled == st.calls // 4
+    with pytest.raises(ValueError):
+        SelfProfiler(stride=0)
+
+
+# ------------------------------------------------------------- dashboard
+def test_dashboard_renders_and_is_inert():
+    def run(with_dash):
+        s = _small_engine()
+        tap = MetricsTap().attach(s)
+        dash = None
+        if with_dash:
+            dash = Dashboard(tap.registry, tap=tap, out=io.StringIO(),
+                             fps=1e6).attach(s)
+            with pytest.raises(RuntimeError):
+                dash.attach(s)
+        jobs = _run_jobs(s, n_jobs=8, seed=2)
+        if dash is not None:
+            dash.finish()
+        return engine_signature(s, jobs), tap.summary(), dash
+    (sig_a, sum_a, _) = run(False)
+    (sig_b, sum_b, dash) = run(True)
+    assert sig_a == sig_b and sum_a == sum_b
+    assert dash.frames > 0
+    frame = dash.render()
+    assert "dispatched" in frame and "occupancy" in frame
+    assert "depth" in frame and "latency mean" in frame
+
+
+def test_dashboard_html_export(tmp_path):
+    s = _small_engine()
+    tap = MetricsTap().attach(s)
+    dash = Dashboard(tap.registry, tap=tap, out=io.StringIO()).attach(s)
+    _run_jobs(s)
+    out = tmp_path / "report.html"
+    dash.export_html(str(out), title="test run")
+    html = out.read_text()
+    assert "<svg" in html and "queue depth" in html
+    assert "tap.dispatches" in html
+
+
+def test_sparkline_shapes():
+    assert sparkline([]) == ""
+    assert set(sparkline([1.0, 1.0, 1.0])) == {"▁"}
+    ramp = sparkline([0.0, 1.0, 2.0, 3.0], width=4)
+    assert ramp[0] == "▁" and ramp[-1] == "█"
+
+
+# ---------------------------------------------------------------- export
+def test_chrome_export_roundtrip(tmp_path):
+    s = _small_engine()
+    rec = FlightRecorder().attach(s)
+    _run_jobs(s, n_jobs=8, seed=1)
+    path = tmp_path / "trace.json"
+    written = rec.export_chrome(str(path))
+    assert written == len(rec.events)
+    doc = json.loads(path.read_text())
+    tev = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    phs = {}
+    for e in tev:
+        phs[e["ph"]] = phs.get(e["ph"], 0) + 1
+        assert "pid" in e and "name" in e
+        if e["ph"] != "M":
+            assert "ts" in e
+    counts = rec.counts()
+    assert phs["X"] == counts["complete"] + counts.get("failed", 0)
+    assert phs["C"] == counts["cycle"]
+    assert phs["M"] == 3
+    # instants: everything that is neither a span nor a counter
+    assert phs["i"] == sum(
+        v for k, v in counts.items()
+        if k not in ("complete", "failed", "cycle"))
+    spans = [e for e in tev if e["ph"] == "X"]
+    assert all(e["dur"] >= 0.0 for e in spans)
