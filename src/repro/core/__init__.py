@@ -1,7 +1,7 @@
 """Core: the paper's contribution — scheduler, latency model, multilevel
 scheduling (Reuther et al., JPDC 2017)."""
 from repro.core.families import FAMILIES, GRID_ENGINE, INPROC, MESOS, SLURM, YARN, LatencyProfile
-from repro.core.faults import FaultPlane, FaultProfile
+from repro.core.faults import FaultPlane, FaultProfile, WallFaultArm
 from repro.core.job import Job, JobState, ResourceRequest, Task, TaskState
 from repro.core.latency_model import (
     ModelFit, delta_t, fit_power_law, total_runtime, utilization_approx,
@@ -16,7 +16,7 @@ from repro.core.simulator import EventLoop
 
 __all__ = [
     "FAMILIES", "GRID_ENGINE", "INPROC", "MESOS", "SLURM", "YARN",
-    "LatencyProfile", "FaultPlane", "FaultProfile",
+    "LatencyProfile", "FaultPlane", "FaultProfile", "WallFaultArm",
     "Job", "JobState", "ResourceRequest", "Task",
     "TaskState", "ModelFit", "delta_t", "fit_power_law", "total_runtime",
     "utilization_approx", "utilization_constant", "utilization_variable",

@@ -43,7 +43,7 @@ from typing import Dict, List, Tuple
 from repro.core.resources import NodeState
 from repro.core.scheduler import Scheduler
 
-__all__ = ["FaultProfile", "FaultPlane"]
+__all__ = ["FaultProfile", "FaultPlane", "WallFaultArm"]
 
 
 @dataclass(frozen=True)
@@ -376,3 +376,99 @@ class FaultPlane:
         """Detach from the loop (the schedule heap is abandoned)."""
         self.sch.loop.remove_source(self._refill)
         self._heap.clear()
+
+
+class WallFaultArm:
+    """Wall-clock arm of the fault plane: real faults against real workers.
+
+    Where :class:`FaultPlane` flips Node flags in virtual time, this arm
+    kills/hangs/restarts actual worker threads and partitions an actual
+    transport, scheduled as events on an ``rt.AsyncRuntime``'s wall-paced
+    loop.  Deliberately duck-typed (no rt import): it needs only
+
+      * ``runtime.loop`` — an EventLoop whose clock tracks wall time;
+      * ``pool`` — ``kill(i) / hang(i) / thaw(i) / restart(i)``
+        (``rt.worker.WorkerPool``);
+      * ``transport`` — ``partition(bool)`` (``rt.comm.ChaosTransport``),
+        only required when partition windows are scheduled.
+
+    Actions fire on the pump thread, serialized with every engine event.
+    ``on_event(now, kind, entity)`` matches the virtual plane's hook, so
+    ``FlightRecorder.attach_faults`` records wall injections identically;
+    ``fired`` is the delivered-schedule ledger tests assert against.
+
+    Build a schedule explicitly (:meth:`at` — deterministic tests) or draw
+    one from a seed (:meth:`schedule_random` — chaos soaks).
+    """
+
+    KINDS = ("kill", "hang", "thaw", "restart", "partition", "heal")
+
+    def __init__(self, runtime, pool, *, transport=None, seed: int = 0):
+        self.runtime = runtime
+        self.pool = pool
+        self.transport = transport
+        self.rng = random.Random(seed)
+        self.fired: List[Tuple[float, str, int]] = []
+        self.on_event = None           # FlightRecorder.attach_faults hook
+
+    # ----------------------------------------------------------- schedule
+    def at(self, t: float, kind: str, ent: int = 0) -> "WallFaultArm":
+        """Arm one action at wall time ``t`` (seconds since runtime start)."""
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown wall fault kind {kind!r}")
+        if kind in ("partition", "heal") and self.transport is None:
+            raise ValueError("partition faults need a transport")
+        self.runtime.loop.at(t, self._fire, kind, ent)
+        return self
+
+    def schedule_random(self, horizon: float, *, kills: int = 0,
+                        hangs: int = 0, hang_len: float = 0.5,
+                        restarts: int = 0, partitions: int = 0,
+                        partition_len: float = 0.5) -> "WallFaultArm":
+        """Draw a seeded schedule over ``[0, horizon)`` wall seconds.
+
+        Hangs and partitions are windows (the paired thaw/heal is armed
+        with the fault, so a soak always ends with the cluster healable).
+        """
+        rng = self.rng
+        n = self.pool.n
+        for _ in range(kills):
+            self.at(rng.uniform(0.0, horizon), "kill", rng.randrange(n))
+        for _ in range(hangs):
+            t = rng.uniform(0.0, horizon)
+            i = rng.randrange(n)
+            self.at(t, "hang", i)
+            self.at(t + hang_len, "thaw", i)
+        for _ in range(restarts):
+            self.at(rng.uniform(0.0, horizon), "restart", rng.randrange(n))
+        for _ in range(partitions):
+            t = rng.uniform(0.0, horizon)
+            self.at(t, "partition")
+            self.at(t + partition_len, "heal")
+        return self
+
+    # ------------------------------------------------------------- deliver
+    def _fire(self, kind: str, ent: int) -> None:
+        pool = self.pool
+        if kind == "kill":
+            pool.kill(ent)
+        elif kind == "hang":
+            pool.hang(ent)
+        elif kind == "thaw":
+            pool.thaw(ent)
+        elif kind == "restart":
+            pool.restart(ent)
+        elif kind == "partition":
+            self.transport.partition(True)
+        elif kind == "heal":
+            self.transport.partition(False)
+        now = self.runtime.loop.now
+        self.fired.append((now, kind, ent))
+        if self.on_event is not None:
+            self.on_event(now, kind, ent)
+
+    def summary(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for _, kind, _ent in self.fired:
+            out[kind] = out.get(kind, 0) + 1
+        return out

@@ -227,6 +227,11 @@ class ResourceManager:
         self.nodes: Dict[int, Node] = {}
         self.licenses: Dict[str, int] = {}
         self.heartbeat_timeout = heartbeat_timeout
+        # wall-clock runtimes (src/repro/rt/) set this: liveness then comes
+        # ONLY from real ``heartbeat()`` calls carried by worker messages —
+        # ``sweep_heartbeats`` stops auto-stamping "responsive" nodes, so a
+        # worker that went quiet is detected within timeout + interval
+        self.external_heartbeats = False
         self._down_callbacks = []
         self._up_callbacks = []
         self._mute_callbacks = []
@@ -353,11 +358,16 @@ class ResourceManager:
         poll — then lapsed ones are marked DOWN.  Detection latency for a
         silent death is therefore a virtual-time quantity in
         ``[heartbeat_timeout, heartbeat_timeout + heartbeat_interval]``,
-        not an oracle."""
-        UP = NodeState.UP
-        for node in self.nodes.values():
-            if node.state is UP and node.alive and not node.muted:
-                node.last_heartbeat = now
+        not an oracle.
+
+        With ``external_heartbeats`` set (wall-clock runtimes) the
+        auto-stamp is skipped entirely: only real ``heartbeat()`` calls —
+        worker messages, task completions — count as liveness."""
+        if not self.external_heartbeats:
+            UP = NodeState.UP
+            for node in self.nodes.values():
+                if node.state is UP and node.alive and not node.muted:
+                    node.last_heartbeat = now
         return self.check_heartbeats(now)
 
     def fail_silent(self, node_id: int, now: float) -> None:

@@ -201,6 +201,11 @@ class Scheduler:
         self.on_sweep: Optional[Callable[[float, List[int]], None]] = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
+        # executors that marshal completions through a thread-safe queue
+        # (core/executor.py) drain it on this loop: completions become
+        # events, serialized with every other engine state change
+        if executor is not None and hasattr(executor, "bind_loop"):
+            executor.bind_loop(self.loop)
 
     # ----------------------------------------------------------- submit
     def submit(self, job: Job) -> None:
@@ -1077,6 +1082,71 @@ class Scheduler:
                 self._cancel(t)
         self._retire(job, JobState.FAILED, now)
 
+    def _lost_attempt(self, task: Task, job: Job, now: float) -> bool:
+        """Close the books on a RUNNING attempt whose node or lease died:
+        lost-work accounting, fault-hit count, then quarantine / requeue /
+        permanent failure.  The caller has already released resources.
+        Returns True when the loss was permanent (the job's books changed
+        and its terminal policy must be re-checked)."""
+        self.lost_work_s += max(now - task.start_time, 0.0)
+        task.node_id = None
+        hits = task.fault_hits + 1
+        task.fault_hits = hits
+        quarantine_after = self.config.quarantine_after
+        if quarantine_after and hits >= quarantine_after:
+            # poison task: its attempts keep coinciding with node
+            # deaths — take it out of rotation regardless of budget
+            task.state = TaskState.QUARANTINED
+            self.quarantined += 1
+            job.failed_tasks += 1
+            if self.on_quarantine is not None:
+                self.on_quarantine(task, now)
+            return True
+        if task.attempts <= job.max_restarts:
+            self._requeue_task(task, now)
+            return False
+        task.state = TaskState.FAILED
+        job.failed_tasks += 1
+        return True
+
+    def reclaim_task(self, task: Task,
+                     attempt: Optional[int] = None) -> bool:
+        """Reclaim a RUNNING attempt whose *lease* expired (the wall-clock
+        runtime: missed lease renewals on a still-UP node, a lease message
+        lost in transit, a worker that restarted without its old leases).
+
+        Feeds the exact node-death path: resources released, lost work
+        accounted, fault-hit counted (a reclaim is a fault-coincident loss,
+        so poison tasks still quarantine), then retry budget / exponential
+        backoff / job failure policy.  ``attempt`` fences stale reclaims:
+        if given and the task has since moved on, this is a no-op.
+        Returns True when the attempt was actually reclaimed.
+        """
+        if task.state is not TaskState.RUNNING:
+            return False
+        if attempt is not None and task.attempts != attempt:
+            return False
+        now = self.loop.now
+        job = self._active_jobs.get(task.job_id)
+        self._running_tasks.pop(task.key, None)
+        nid = task.node_id
+        self.rm.release(task)
+        if self._fast and task.request.slots == 1 and nid is not None:
+            node = self.rm.nodes[nid]
+            if node.state is NodeState.UP:
+                self._free_stack.append(node)
+        if job is None:
+            task.node_id = None
+            return True
+        if self._lost_attempt(task, job, now) \
+                and job.job_id in self._active_jobs:
+            if job.failure_policy == "fail_fast":
+                self._fail_fast(job, now)
+            elif job.done:
+                self._retire(job, self._terminal_state(job), now)
+        self._request_cycle()
+        return True
+
     def _node_down(self, node_id: int) -> None:
         """Requeue orphaned tasks of a failed node (job restarting §3.2.7).
 
@@ -1087,7 +1157,6 @@ class Scheduler:
         failure instead of an O(stack) rebuild per failure.
         """
         now = self.loop.now
-        quarantine_after = self.config.quarantine_after
         touched: List[Job] = []
         for t in list(self._running_tasks.values()):
             if t.node_id != node_id:
@@ -1101,24 +1170,7 @@ class Scheduler:
             # (release is a no-op on the node side: task.key was cleared
             # from node.running)
             self.rm.release(t)
-            self.lost_work_s += max(now - t.start_time, 0.0)
-            t.node_id = None
-            hits = t.fault_hits + 1
-            t.fault_hits = hits
-            if quarantine_after and hits >= quarantine_after:
-                # poison task: its attempts keep coinciding with node
-                # deaths — take it out of rotation regardless of budget
-                t.state = TaskState.QUARANTINED
-                self.quarantined += 1
-                job.failed_tasks += 1
-                if self.on_quarantine is not None:
-                    self.on_quarantine(t, now)
-                touched.append(job)
-            elif t.attempts <= job.max_restarts:
-                self._requeue_task(t, now)
-            else:
-                t.state = TaskState.FAILED
-                job.failed_tasks += 1
+            if self._lost_attempt(t, job, now):
                 touched.append(job)
         for job in touched:
             # the failed task may have been the job's last outstanding one

@@ -1,0 +1,23 @@
+"""Wall-clock async runtime: lease-based workers over pluggable transports.
+
+The virtual-time engine (core/) measures modeled control-plane latency;
+this package runs the *same* engine against real workers over real
+transports, so the paper's (t_s, alpha_s) can be measured on the wall
+clock (benchmarks/rt_replay.py) and the PR-6 fault lifecycle can be
+exercised end-to-end under injected worker death, message loss and lease
+expiry (tests/test_rt.py).  See README.md in this directory.
+"""
+from repro.rt.comm import (ChaosTransport, Comm, CommClosed,
+                           InMemoryTransport, Listener, Message,
+                           SocketTransport, Transport)
+from repro.rt.runtime import WALL, AsyncRuntime, Lease
+from repro.rt.worker import (FnPayload, SleepPayload, Worker, WorkerPool,
+                             register_payload)
+
+__all__ = [
+    "Message", "CommClosed", "Comm", "Listener", "Transport",
+    "InMemoryTransport", "SocketTransport", "ChaosTransport",
+    "SleepPayload", "FnPayload", "register_payload",
+    "Worker", "WorkerPool",
+    "WALL", "Lease", "AsyncRuntime",
+]

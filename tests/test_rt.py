@@ -1,0 +1,554 @@
+"""Wall-clock async runtime (PR 9): chaos soaks + executor regressions.
+
+Five seeded fault regimes drive the rt plane end-to-end on the in-memory
+transport (worker kill, silent hang, message drop/dup, partition + heal,
+plus the happy path), asserting the tentpole contract after every soak:
+
+* every task is COMPLETED exactly once or QUARANTINED — never lost,
+  never double-completed (FlightRecorder event stream is the witness);
+* the lease registry drains to zero — no leaked leases;
+* cluster-global licenses return to their full pool;
+* FlightRecorder lifecycle counts match the scheduler's own ledger.
+
+Everything is wall-clock and therefore time-bounded: every soak goes
+through ``run_until_idle(timeout)`` and the timeouts are generous (a slow
+CI box makes tests slower, not flaky).
+
+Also here: the ThreadExecutor satellite regressions (error recording,
+marshaled completions fire on the draining thread only, deterministic
+shutdown) and the detection-latency / fencing property tests.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import pytest
+
+from repro.core import (Job, ResourceManager, Scheduler, SchedulerConfig,
+                        WallFaultArm)
+from repro.core.executor import InlineExecutor, ThreadExecutor
+from repro.core.job import ResourceRequest, TaskState
+from repro.core.simulator import EventLoop
+from repro.obs import FlightRecorder, Registry
+from repro.rt import (AsyncRuntime, ChaosTransport, FnPayload,
+                      InMemoryTransport, SleepPayload, SocketTransport,
+                      WorkerPool, register_payload)
+
+DONE = {TaskState.COMPLETED, TaskState.QUARANTINED}
+
+
+# ------------------------------------------------------------------ helpers
+def soak_check(rt: AsyncRuntime, jobs, rec: FlightRecorder = None) -> None:
+    """The tentpole contract, asserted after every regime."""
+    for job in jobs:
+        for t in job.tasks:
+            assert t.state in DONE, (t.key, t.state)
+    assert not rt._leases, f"leaked leases: {list(rt._leases)}"
+    sch = rt.sch
+    if rec is not None:
+        counts = rec.counts()
+        assert counts.get("complete", 0) == sch.completed
+        assert counts.get("quarantine", 0) == sch.quarantined
+        assert counts.get("requeue", 0) + counts.get("backoff", 0) \
+            == sch.requeues
+        assert counts.get("dispatch", 0) == sch.dispatched
+        # exactly-once: no task key ever completes twice
+        per_task = collections.Counter(
+            (ev[2], ev[3]) for ev in rec.events if ev[1] == "complete")
+        dups = {k: v for k, v in per_task.items() if v > 1}
+        assert not dups, f"double completions: {dups}"
+
+
+def make_rt(transport, **kw):
+    kw.setdefault("lease_ttl", 0.6)
+    kw.setdefault("heartbeat_interval", 0.05)
+    kw.setdefault("heartbeat_timeout", 0.25)
+    kw.setdefault("config", SchedulerConfig(retry_backoff=0.02))
+    return AsyncRuntime(transport, **kw)
+
+
+def pump_until(rt: AsyncRuntime, cond, timeout: float = 5.0) -> None:
+    deadline = time.monotonic() + timeout
+    while not cond():
+        rt.step()
+        if time.monotonic() > deadline:
+            raise AssertionError("pump_until timed out")
+        time.sleep(0.002)
+
+
+# ============================================================ regime 1/5
+def test_happy_path_in_memory():
+    transport = InMemoryTransport()
+    rt = make_rt(transport)
+    rec = FlightRecorder().attach(rt.sch)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    try:
+        job = Job.array(100, duration=0.0)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=30.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert rt.sch.completed == 100
+    assert rt.accepted_results == 100
+    assert rt.leases_expired == 0 and rt.stale_results == 0
+    soak_check(rt, [job], rec)
+
+
+# ============================================================ regime 2/5
+def test_worker_kill_requeues_and_licenses_restored():
+    """Abrupt worker death mid-flight: leases orphan, the PR-6 node-down
+    path requeues, and the cluster-global license pool fully refills."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, lease_ttl=0.4, heartbeat_timeout=0.2)
+    rt.rm.add_license("tok", 3)
+    rec = FlightRecorder().attach(rt.sch)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    arm = WallFaultArm(rt, pool, seed=1)
+    rec.attach_faults(arm)
+    arm.at(0.15, "kill", 1)
+    try:
+        job = Job.array(60, duration=0.02, max_restarts=50,
+                        request=ResourceRequest(licenses=("tok",)))
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=60.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert arm.summary() == {"kill": 1}
+    assert rt.up_workers == 3
+    soak_check(rt, [job], rec)
+    assert all(t.state is TaskState.COMPLETED for t in job.tasks)
+    # licenses are cluster-global: a worker dying mid-hold must not leak
+    assert rt.rm.licenses == {"tok": 3}
+    # the recorder saw the injection itself
+    assert rec.counts().get("fault", 0) == 1
+
+
+# ============================================================ regime 3/5
+def test_chaos_drop_dup_delay():
+    """>=10% message drop + duplicate delivery: TTL expiry re-grants lost
+    leases, duplicate results are fenced, every task still completes
+    exactly once."""
+    transport = ChaosTransport(InMemoryTransport(), drop=0.15, dup=0.10,
+                               delay=0.01, seed=7)
+    rt = make_rt(transport, lease_ttl=0.3,
+                 config=SchedulerConfig(retry_backoff=0.02,
+                                        quarantine_after=8))
+    rec = FlightRecorder().attach(rt.sch)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    try:
+        job = Job.array(60, duration=0.02, max_restarts=100)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=90.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert transport.stats["dropped"] > 0, "chaos never engaged"
+    assert transport.stats["duplicated"] > 0
+    soak_check(rt, [job], rec)
+
+
+# ============================================================ regime 4/5
+def test_silent_hang_detected_and_recovered():
+    """A hung worker (no heartbeats, never reports) is indistinguishable
+    from death: the sweep marks it down within the timeout and survivors
+    absorb its work."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, lease_ttl=0.4, heartbeat_timeout=0.2)
+    rec = FlightRecorder().attach(rt.sch)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    arm = WallFaultArm(rt, pool, seed=2)
+    rec.attach_faults(arm)
+    arm.at(0.1, "hang", 0)
+    arm.at(1.2, "thaw", 0)
+    try:
+        job = Job.array(60, duration=0.02, max_restarts=50)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=60.0), rt.summary()
+        # the job may retire before the thaw instant: pump the wall past it
+        pump_until(rt, lambda: arm.summary().get("thaw") == 1, timeout=5.0)
+    finally:
+        pool.stop()
+        rt.close()
+    assert arm.summary() == {"hang": 1, "thaw": 1}
+    counts = rec.counts()
+    assert counts.get("node_down", 0) >= 1, "hang was never detected"
+    soak_check(rt, [job], rec)
+
+
+# ============================================================ regime 5/5
+def test_partition_shed_heal_resubmit():
+    """Full partition: the fleet goes quiet, degradation sheds the job
+    arriving mid-outage, heal rejoins the fleet and the shed job
+    resubmits and completes."""
+    transport = ChaosTransport(InMemoryTransport(), seed=3)
+    rt = make_rt(transport, lease_ttl=0.4, heartbeat_timeout=0.2)
+    rec = FlightRecorder().attach(rt.sch)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    arm = WallFaultArm(rt, pool, transport=transport, seed=3)
+    rec.attach_faults(arm)
+    arm.at(0.15, "partition")
+    arm.at(1.6, "heal")
+    try:
+        # j1 spans the partition window so heartbeat sweeps stay armed and
+        # detect the silent fleet (sweeps only run with active jobs)
+        j1 = Job.array(40, duration=0.05, max_restarts=50)
+        j2 = Job.array(10, duration=0.01, max_restarts=50)
+        rt.submit(j1)
+        rt.submit_at(0.8, j2)       # arrives mid-outage -> shed
+        assert rt.run_until_idle(timeout=90.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert transport.stats["partition_dropped"] > 0
+    assert rt.shed_jobs >= 1, "degradation never shed"
+    assert rt.resubmitted == rt.shed_jobs
+    assert not rt.shed
+    soak_check(rt, [j1, j2], rec)
+
+
+# =============================================================== transport
+def test_socket_roundtrip():
+    """Loopback TCP with pickled payloads: the same protocol end to end."""
+    transport = SocketTransport()
+    rt = make_rt(transport, address="127.0.0.1:0", lease_ttl=2.0,
+                 heartbeat_timeout=1.0)
+    pool = WorkerPool(transport, rt.address, 2, slots=2,
+                      hb_every=0.05).start()
+    try:
+        job = Job.array(30, payloads=[SleepPayload(0.001)] * 30)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=30.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert rt.sch.completed == 30
+    soak_check(rt, [job])
+
+
+def test_socket_fn_payload_registry():
+    register_payload("rt_test_touch", lambda x: x * 2)
+    transport = SocketTransport()
+    rt = make_rt(transport, address="127.0.0.1:0", lease_ttl=2.0,
+                 heartbeat_timeout=1.0)
+    pool = WorkerPool(transport, rt.address, 1, hb_every=0.05).start()
+    try:
+        job = Job.array(4, payloads=[FnPayload("rt_test_touch", i)
+                                     for i in range(4)])
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=20.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert rt.sch.completed == 4
+
+
+def test_chaos_transport_reset_and_worker_reconnect():
+    """Connection resets sever the comm mid-protocol; the worker's
+    loss-tolerant send reconnects and the run still finishes."""
+    transport = ChaosTransport(InMemoryTransport(), reset=0.02, seed=11)
+    rt = make_rt(transport, lease_ttl=0.3, heartbeat_timeout=0.25,
+                 config=SchedulerConfig(retry_backoff=0.02,
+                                        quarantine_after=8))
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    try:
+        job = Job.array(40, duration=0.01, max_restarts=100)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=90.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    soak_check(rt, [job])
+
+
+# ======================================================= property: latency
+@pytest.mark.parametrize("hb_timeout,hb_interval", [
+    (0.15, 0.05), (0.25, 0.05), (0.30, 0.10)])
+def test_detection_latency_bound(hb_timeout, hb_interval):
+    """A killed worker is marked DOWN within heartbeat_timeout +
+    heartbeat_interval (+ scheduling slack) of the kill."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, lease_ttl=5.0, heartbeat_timeout=hb_timeout,
+                 heartbeat_interval=hb_interval)
+    down_at = []
+    rt.rm.on_node_down(lambda nid: down_at.append(time.monotonic()))
+    pool = WorkerPool(transport, rt.address, 2, hb_every=0.02).start()
+    try:
+        # work spans the fault so sweeps stay armed
+        job = Job.array(40, duration=0.05, max_restarts=50)
+        rt.submit(job)
+        pump_until(rt, lambda: rt.sch.dispatched > 0, timeout=5.0)
+        killed_at = time.monotonic()
+        pool.kill(1)
+        assert rt.run_until_idle(timeout=60.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert down_at, "kill was never detected"
+    latency = down_at[0] - killed_at
+    # slack covers pump wake granularity + CI scheduling noise
+    assert latency <= hb_timeout + hb_interval + 0.40, latency
+    soak_check(rt, [job])
+
+
+# ======================================================== property: fencing
+class _FakeWorker:
+    """A scripted protocol peer: drives the driver by hand, no threads."""
+
+    def __init__(self, rt, name="fake", slots=1):
+        self.rt = rt
+        self.name = name
+        self.slots = slots
+        self.inbox = []
+        self.comm = rt.transport.connect(rt.address)
+        self.comm.set_receiver(lambda c, m: self.inbox.append(m))
+
+    def send(self, kind, **body):
+        body.setdefault("worker", self.name)
+        body.setdefault("slots", self.slots)
+        self.comm.send((kind, body))
+
+    def leases(self):
+        return [b["lease"] for k, b in self.inbox if k == "lease"]
+
+
+def test_reclaimed_lease_never_double_completes():
+    """Attempt-id fencing: a result racing a TTL reclaim is dropped, the
+    task completes exactly once via the successor attempt, and the stale
+    duplicate of *that* result is dropped too."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, lease_ttl=0.2, heartbeat_timeout=60.0,
+                 heartbeat_interval=10.0,
+                 config=SchedulerConfig(retry_backoff=0.01))
+    completions = []
+    rec = FlightRecorder().attach(rt.sch)
+    fw = _FakeWorker(rt)
+    fw.send("register")
+    fw.send("claim", free=1)
+    job = Job.array(1, duration=0.0, max_restarts=5)
+    rt.submit(job)
+    pump_until(rt, lambda: len(fw.leases()) >= 1)
+    first = fw.leases()[0]
+    # never answer: the TTL reclaims attempt 0 and regrants attempt 1
+    pump_until(rt, lambda: rt.leases_expired >= 1, timeout=5.0)
+    fw.send("claim", free=1)           # fresh claim token for the regrant
+    pump_until(rt, lambda: len(fw.leases()) >= 2, timeout=5.0)
+    second = fw.leases()[1]
+    assert second != first
+    # now the zombie answer for the reclaimed attempt arrives: fenced
+    fw.send("result", lease=first, ok=True)
+    pump_until(rt, lambda: rt.stale_results >= 1)
+    assert rt.sch.completed == 0
+    # the live attempt answers -- completes the task, exactly once
+    fw.send("result", lease=second, ok=True)
+    pump_until(rt, lambda: rt.sch.completed == 1)
+    # and a chaos-style duplicate of the live answer is also fenced
+    fw.send("result", lease=second, ok=True)
+    pump_until(rt, lambda: rt.stale_results >= 2)
+    rt.close()
+    assert rt.accepted_results == 1
+    assert job.tasks[0].state is TaskState.COMPLETED
+    completes = [ev for ev in rec.events if ev[1] == "complete"]
+    assert len(completes) == 1
+    assert not rt._leases
+
+
+def test_restart_amnesia_old_lease_dies_by_ttl():
+    """restart(i) rejoins the same worker id with no memory of its leases:
+    the old incarnation's lease must die by TTL, not hang forever."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, lease_ttl=0.3, heartbeat_timeout=0.25)
+    pool = WorkerPool(transport, rt.address, 2, hb_every=0.02).start()
+    arm = WallFaultArm(rt, pool, seed=5)
+    arm.at(0.1, "restart", 0)
+    try:
+        job = Job.array(30, duration=0.02, max_restarts=50)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=60.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    assert pool.restarts == 1
+    soak_check(rt, [job])
+
+
+# ============================================================ fault arm API
+def test_wall_fault_arm_validates():
+    transport = InMemoryTransport()
+    rt = make_rt(transport)
+    pool = WorkerPool(transport, rt.address, 1)
+    arm = WallFaultArm(rt, pool, seed=0)
+    with pytest.raises(ValueError):
+        arm.at(0.1, "meteor")
+    with pytest.raises(ValueError):
+        arm.at(0.1, "partition")       # no transport wired
+    rt.close()
+
+
+def test_wall_fault_arm_schedule_random_pairs():
+    transport = ChaosTransport(InMemoryTransport(), seed=9)
+    rt = make_rt(transport)
+    pool = WorkerPool(transport, rt.address, 4, hb_every=0.02).start()
+    arm = WallFaultArm(rt, pool, transport=transport, seed=9)
+    arm.schedule_random(0.5, kills=1, hangs=1, hang_len=0.2,
+                        partitions=1, partition_len=0.2)
+    try:
+        job = Job.array(40, duration=0.02, max_restarts=100)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=90.0), rt.summary()
+        # the job may retire before late-scheduled faults: pump past them
+        pump_until(rt, lambda: (arm.summary().get("heal") == 1
+                                and arm.summary().get("thaw") == 1),
+                   timeout=5.0)
+    finally:
+        pool.stop()
+        rt.close()
+    s = arm.summary()
+    assert s.get("hang") == s.get("thaw") == 1
+    assert s.get("partition") == s.get("heal") == 1
+    assert s.get("kill") == 1
+    soak_check(rt, [job])
+
+
+# ========================================================== observability
+def test_registry_gauges_bind():
+    transport = InMemoryTransport()
+    rt = make_rt(transport)
+    reg = Registry()
+    rt.bind_registry(reg)
+    pool = WorkerPool(transport, rt.address, 2, hb_every=0.02).start()
+    try:
+        job = Job.array(20, duration=0.0)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=30.0)
+    finally:
+        pool.stop()
+        rt.close()
+    snap = reg.snapshot()
+    assert snap["rt.workers_peak"] == 2
+    assert snap["rt.results_accepted"] == 20
+    assert snap["rt.leases_outstanding"] == 0
+
+
+# ================================================= satellite: ThreadExecutor
+def _mk_task(payload=None, duration=0.0):
+    job = Job.array(1, duration=duration,
+                    payloads=None if payload is None else [payload])
+    return job.tasks[0]
+
+
+def test_thread_executor_records_errors():
+    ex = ThreadExecutor(workers=2)
+    try:
+        def boom():
+            raise RuntimeError("payload exploded")
+        outcomes = []
+        ex.run(_mk_task(boom), outcomes.append)
+        ex.run(_mk_task(lambda: 42), outcomes.append)
+        ex.drain(timeout=5.0)
+    finally:
+        ex.shutdown(join=True)
+    assert sorted(outcomes) == [False, True]
+    errs = list(ex.errors.values())
+    assert len(errs) == 1 and isinstance(errs[0], RuntimeError)
+    assert 42 in ex.results.values()
+
+
+def test_inline_executor_records_errors():
+    ex = InlineExecutor()
+    outcomes = []
+    def boom():
+        raise ValueError("nope")
+    ex.run(_mk_task(boom), outcomes.append)
+    assert outcomes == [False]
+    assert isinstance(list(ex.errors.values())[0], ValueError)
+
+
+def test_thread_executor_completions_fire_on_draining_thread():
+    """The marshaling regression: dozens of payloads completing
+    concurrently on worker threads must have their ``done`` callbacks run
+    on the *draining* thread only, never a worker thread."""
+    ex = ThreadExecutor(workers=8)
+    fired_on = []
+    try:
+        for _ in range(200):
+            ex.run(_mk_task(lambda: None),
+                   lambda ok: fired_on.append(threading.get_ident()))
+        ex.drain(timeout=10.0)
+    finally:
+        ex.shutdown(join=True)
+    assert len(fired_on) == 200
+    assert set(fired_on) == {threading.get_ident()}, \
+        "done() escaped onto a worker thread"
+    assert ex.outstanding == 0
+
+
+def test_thread_executor_loop_bound_drain():
+    """Bound to an EventLoop via the Scheduler, completions become loop
+    events: a virtual-time run over real threads terminates cleanly."""
+    loop = EventLoop()
+    rm = ResourceManager()
+    rm.add_nodes(4, slots=1)
+    ex = ThreadExecutor(workers=4)
+    sch = Scheduler(rm, loop=loop, executor=ex)
+    try:
+        job = Job.array(16, duration=0.005)
+        sch.submit(job)
+        loop.run()
+    finally:
+        ex.shutdown(join=True)
+    assert sch.completed == 16
+    assert job.done
+
+
+def test_thread_executor_shutdown_deterministic():
+    ex = ThreadExecutor(workers=4)
+    t0 = time.monotonic()
+    ex.shutdown(join=True)
+    assert time.monotonic() - t0 < 2.0, "shutdown waited on poll timeouts"
+    assert not ex._threads      # every worker joined
+
+
+# ===================================================== worker-side details
+def test_worker_payload_error_reported_not_raised():
+    transport = InMemoryTransport()
+    rt = make_rt(transport, config=SchedulerConfig(retry_backoff=0.01,
+                                                   quarantine_after=2))
+    pool = WorkerPool(transport, rt.address, 2, hb_every=0.02).start()
+    def boom():
+        raise RuntimeError("task failed on worker")
+    register_payload("rt_test_boom", boom)
+    try:
+        job = Job.array(5, payloads=[FnPayload("rt_test_boom")] * 5)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=60.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    # genuine payload failures retire FAILED (not lost, not retried
+    # forever), with the worker-side traceback surfaced driver-side
+    assert all(t.state is TaskState.FAILED for t in job.tasks)
+    assert not rt._leases
+    assert rt.errors and any("task failed on worker" in e
+                             for e in rt.errors.values())
+
+
+def test_graceful_bye_is_immediate():
+    """A clean worker stop announces itself: no detection latency burn."""
+    transport = InMemoryTransport()
+    rt = make_rt(transport, heartbeat_timeout=30.0)   # sweep can't save us
+    pool = WorkerPool(transport, rt.address, 2, hb_every=0.02).start()
+    pump_until(rt, lambda: rt.up_workers == 2)
+    pool.workers[1].stop()
+    pump_until(rt, lambda: rt.up_workers == 1, timeout=5.0)
+    try:
+        job = Job.array(10, duration=0.0, max_restarts=10)
+        rt.submit(job)
+        assert rt.run_until_idle(timeout=30.0), rt.summary()
+    finally:
+        pool.stop()
+        rt.close()
+    soak_check(rt, [job])
