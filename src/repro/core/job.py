@@ -48,6 +48,13 @@ class ResourceRequest:
     node_attrs: Dict[str, Any] = field(default_factory=dict)  # constraints
 
 
+# the no-constraint unit request every defaulted Job.array shares: requests
+# are read-only in the engine, and one shared instance keeps array
+# construction off the allocator on the million-job submit path (the
+# scheduler's unit check also collapses to an identity test against it)
+_DEFAULT_REQ = ResourceRequest()
+
+
 # lifecycle fields a fresh Task leaves unset until the engine first writes
 # them (construction is on the submit hot path at millions of tasks; five
 # untouched slot stores per task are measurable)
@@ -124,16 +131,42 @@ class Task:
 _job_ids = itertools.count(1)
 
 
-@dataclass(slots=True)
+# rarely-touched Job fields left unset until first written (construction is
+# on the million-job submit path; the engine-hot fields — the submit gate's
+# reads and the arena burst's — are stored eagerly in __init__)
+_JOB_LAZY = {
+    "name": "job",
+    "user": "user",
+    "submit_time": 0.0,
+    "end_time": 0.0,
+    "failed_tasks": 0,
+    "n_clones": 0,
+    "max_restarts": 0,
+    "failure_policy": "retry",
+    "_arena": None,
+    "_filled": 0,
+}
+
+
+@dataclass(slots=True, init=False)
 class Job:
-    """A job: one task, an array of independent tasks, or a gang-parallel job."""
+    """A job: one task, an array of independent tasks, or a gang-parallel job.
+
+    Task materialization is *lazy*: ``Job.array`` records a compact spec
+    (``_lazy``) instead of building Task objects, and the ``tasks`` property
+    builds them on first access — either fresh (unscheduled jobs, the
+    object-path engine) or as views over the scheduler's struct-of-arrays
+    arena (``core/arena.py``) when the job was dispatched through the arena
+    fast lane.  Hot-path consumers (``n_tasks``, the injector, job
+    retirement) never materialize.
+    """
 
     name: str = "job"
     user: str = "user"
     queue: str = "default"
     priority: float = 0.0
     parallel: bool = False            # gang: all tasks co-scheduled
-    tasks: List[Task] = field(default_factory=list)
+    _tasks: Optional[List[Task]] = None
     depends_on: Tuple[int, ...] = ()  # job ids (DAG dependencies, §3.2.3)
     state: JobState = JobState.PENDING
     submit_time: float = 0.0
@@ -149,6 +182,90 @@ class Job:
     #   "fail_fast"   — cancel every non-terminal sibling, retire FAILED now
     #   "best_effort" — job retires COMPLETED if any task completed
     failure_policy: str = "retry"
+    # lazy-materialization spec: (n, duration, durations-tuple|None, request)
+    _lazy: Optional[Tuple[int, float, Optional[Tuple[float, ...]],
+                          ResourceRequest]] = None
+    _arena: Optional[Any] = None      # Arena owning this job's task slab
+    _lo: int = -1                     # first arena task id (contiguous range)
+    _filled: int = 0                  # arena tasks dispatched so far
+
+    def __init__(self, name: str = "job", user: str = "user",
+                 queue: str = "default", priority: float = 0.0,
+                 parallel: bool = False,
+                 _tasks: Optional[List[Task]] = None,
+                 depends_on: Tuple[int, ...] = (),
+                 state: JobState = JobState.PENDING,
+                 submit_time: float = 0.0, end_time: float = 0.0,
+                 job_id: Optional[int] = None, completed_tasks: int = 0,
+                 failed_tasks: int = 0, n_clones: int = 0,
+                 max_restarts: int = 0, failure_policy: str = "retry"):
+        self.queue = queue
+        self.priority = priority
+        self.parallel = parallel
+        self._tasks = _tasks
+        self.depends_on = depends_on
+        self.state = state
+        self.job_id = next(_job_ids) if job_id is None else job_id
+        self.completed_tasks = completed_tasks
+        self._lazy = None
+        self._lo = -1
+        # everything below stays unset unless non-default (see _JOB_LAZY /
+        # __getattr__)
+        if name != "job":
+            self.name = name
+        if user != "user":
+            self.user = user
+        if submit_time:
+            self.submit_time = submit_time
+        if end_time:
+            self.end_time = end_time
+        if failed_tasks:
+            self.failed_tasks = failed_tasks
+        if n_clones:
+            self.n_clones = n_clones
+        if max_restarts:
+            self.max_restarts = max_restarts
+        if failure_policy != "retry":
+            self.failure_policy = failure_policy
+
+    def __getattr__(self, name):
+        # only reached on unset slots: lazy field defaults
+        try:
+            return _JOB_LAZY[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    @property
+    def tasks(self) -> List[Task]:
+        t = self._tasks
+        if t is None:
+            t = self._materialize()
+        return t
+
+    @tasks.setter
+    def tasks(self, value: List[Task]) -> None:
+        self._tasks = value
+
+    def _materialize(self) -> List[Task]:
+        if self._arena is not None:
+            self._arena.materialize_job(self)
+            return self._tasks
+        spec = self._lazy
+        if spec is None:
+            self._tasks = []
+            return self._tasks
+        n, duration, durations, req = spec
+        jid = self.job_id
+        if durations is None:
+            ts = [Task(jid, i, duration, None, req) for i in range(n)]
+        else:
+            ts = [Task(jid, i, durations[i], None, req) for i in range(n)]
+        st = self.submit_time
+        if st:
+            for t in ts:
+                t.submit_time = st
+        self._tasks = ts
+        return ts
 
     @classmethod
     def array(cls, n_tasks: int, duration: float = 0.0, *,
@@ -161,20 +278,22 @@ class Job:
         All tasks share one request object (requests are read-only in the
         engine): array construction stays O(n) small allocations and the
         scheduler's unit-job check collapses to identity comparisons.
+        Without payloads the build is deferred entirely — only the spec is
+        stored, and Task objects exist when something reads ``job.tasks``.
         """
-        job = cls(**kw)
-        req = request or ResourceRequest()
+        job = cls(**kw) if kw else cls()
+        req = request or _DEFAULT_REQ
+        if payloads is None:
+            job._lazy = (n_tasks, duration,
+                         tuple(durations) if durations is not None else None,
+                         req)
+            return job
         jid = job.job_id
-        if durations is None and payloads is None:
-            job.tasks = [Task(jid, i, duration, None, req)
-                         for i in range(n_tasks)]
-        else:
-            job.tasks = [
-                Task(jid, i,
-                     durations[i] if durations is not None else duration,
-                     payloads[i] if payloads is not None else None,
-                     req)
-                for i in range(n_tasks)]
+        job._tasks = [
+            Task(jid, i,
+                 durations[i] if durations is not None else duration,
+                 payloads[i], req)
+            for i in range(n_tasks)]
         return job
 
     @classmethod
@@ -186,13 +305,19 @@ class Job:
 
     @property
     def n_tasks(self) -> int:
-        return len(self.tasks)
+        # never materializes: retirement/injector accounting reads this on
+        # the hot path where Task objects may not (and must not) exist
+        t = self._tasks
+        if t is not None:
+            return len(t)
+        spec = self._lazy
+        return spec[0] if spec is not None else 0
 
     @property
     def n_real_tasks(self) -> int:
         """Tasks excluding speculative clones (a clone resolves its
         original's slot in the completion accounting)."""
-        return len(self.tasks) - self.n_clones
+        return self.n_tasks - self.n_clones
 
     @property
     def done(self) -> bool:

@@ -262,6 +262,19 @@ class QueueManager:
             # keys are total (job_id breaks ties), so Job never compares
             bisect.insort(self._ordered, (_global_key(job), job))
 
+    def adopt(self, job: Job, now: float) -> None:
+        """Register a job the scheduler admitted outside the manager (the
+        arena fast lane) without disturbing its state or submit stamp.
+
+        Exactly ``submit`` minus stamping and dependency gating: arena-lane
+        jobs are dependency-free and already QUEUED/RUNNING; ``push`` sets
+        QUEUED unconditionally, so the caller's state is restored around it.
+        """
+        self.jobs[job.job_id] = job
+        state = job.state
+        self._enqueue(job, now)
+        job.state = state
+
     def _deps_met(self, job: Job) -> bool:
         return all(self._finished.get(d) == JobState.COMPLETED
                    for d in job.depends_on)

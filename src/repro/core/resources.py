@@ -235,6 +235,13 @@ class ResourceManager:
         self._down_callbacks = []
         self._up_callbacks = []
         self._mute_callbacks = []
+        # fired BEFORE any node-state mutation (death, drain, rejoin, slow,
+        # mute, growth).  The scheduler's arena span keeps the free-slot
+        # stack in numpy and leaves Node counters stale; ``_leave_up`` reads
+        # ``node.free_slots`` before the down callbacks run, so the span
+        # must be flushed strictly before the mutation starts — an ordinary
+        # down callback fires too late.
+        self._pre_change_cbs = []
         # incremental aggregates over UP nodes
         self._up_ids: Set[int] = set()
         self._up_cache: Optional[List[Node]] = None
@@ -283,9 +290,20 @@ class ResourceManager:
         self._up_cache = None
         self._free_cache = None
 
+    def on_pre_change(self, callback) -> None:
+        """Register a hook fired before any node-state mutation (see
+        ``_pre_change_cbs``); ``callback()`` takes no arguments."""
+        self._pre_change_cbs.append(callback)
+
+    def _pre_change(self) -> None:
+        for cb in self._pre_change_cbs:
+            cb()
+
     # -------------------------------------------------------- topology
     def add_nodes(self, count: int, slots: int = 1, mem_mb: int = 1 << 20,
                   accelerators: int = 0, attrs: Optional[Dict] = None) -> List[int]:
+        if self._pre_change_cbs:
+            self._pre_change()
         start = len(self.nodes)
         self.index.ensure(start + count)
         ids = []
@@ -303,6 +321,9 @@ class ResourceManager:
     # -------------------------------------------------------- dynamics
     def heartbeat(self, node_id: int, now: float, load: float = 0.0) -> None:
         node = self.nodes[node_id]
+        if (self._pre_change_cbs
+                and (not node.alive or node.state is NodeState.DOWN)):
+            self._pre_change()
         node.last_heartbeat = now
         node.load = load
         if not node.alive:              # a received beat proves life
@@ -318,6 +339,8 @@ class ResourceManager:
 
     def check_heartbeats(self, now: float) -> List[int]:
         """Mark nodes DOWN whose heartbeat lapsed; returns newly-down ids."""
+        if self._pre_change_cbs:
+            self._pre_change()
         newly_down = []
         for node in self.nodes.values():
             if (node.state is NodeState.UP
@@ -378,6 +401,8 @@ class ResourceManager:
         node = self.nodes[node_id]
         if node.state is not NodeState.UP or not node.alive:
             return
+        if self._pre_change_cbs:
+            self._pre_change()
         node.alive = False
         node.last_heartbeat = now
         self._hidden_dead += 1
@@ -387,6 +412,8 @@ class ResourceManager:
         node = self.nodes[node_id]
         if node.muted == muted:
             return
+        if self._pre_change_cbs:
+            self._pre_change()
         node.muted = muted
         for cb in self._mute_callbacks:
             cb(node_id, muted)
@@ -397,6 +424,8 @@ class ResourceManager:
     def set_slow(self, node_id: int, factor: float) -> None:
         """Degrade (factor > 1) or restore (factor = 1) a node's speed."""
         node = self.nodes[node_id]
+        if self._pre_change_cbs and node.slow != factor:
+            self._pre_change()
         if node.slow == 1.0 and factor != 1.0:
             self._slow_nodes += 1
         elif node.slow != 1.0 and factor == 1.0:
@@ -405,6 +434,8 @@ class ResourceManager:
 
     def mark_down(self, node_id: int) -> List[Tuple[int, int]]:
         """Fail a node; returns the task keys that were running on it."""
+        if self._pre_change_cbs:
+            self._pre_change()
         node = self.nodes[node_id]
         if node.state is NodeState.UP:
             if not node.alive:
@@ -421,6 +452,8 @@ class ResourceManager:
         return orphans
 
     def drain(self, node_id: int) -> None:
+        if self._pre_change_cbs:
+            self._pre_change()
         node = self.nodes[node_id]
         if node.state is NodeState.UP:
             self._leave_up(node)

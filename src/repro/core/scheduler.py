@@ -28,18 +28,27 @@ The engine is used three ways:
 """
 from __future__ import annotations
 
+import bisect
 import collections
+import heapq
 import statistics
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 try:                                   # closed-form wave math (large waves)
     import numpy as _np
 except ImportError:                    # pure-Python recurrence still exact
     _np = None
 
+if _np is not None:                    # the arena is numpy-backed by design
+    from repro.core.arena import Arena, CHUNK_BITS as _CHUNK_BITS
+else:
+    Arena = None
+    _CHUNK_BITS = 15
+
 from repro.core.families import INPROC, LatencyProfile
-from repro.core.job import Job, JobState, JobStats, Task, TaskState
+from repro.core.job import (Job, JobState, JobStats, Task, TaskState,
+                            _DEFAULT_REQ)
 from repro.core.policies import FIFOPolicy, Policy
 from repro.core.queues import QueueManager
 from repro.core.resources import NodeState, ResourceManager
@@ -74,6 +83,18 @@ class SchedulerConfig:
     # identical to the per-event path (tests/test_wavepath.py); turn off to
     # force per-event processing (differential testing, debugging)
     wave_batching: bool = True
+    # struct-of-arrays arena (core/arena.py): while the engine is in the
+    # pure FIFO/unit regime with no observers and no fault machinery, jobs
+    # bypass the QueueManager entirely (a FIFO deque of *lazy* jobs — no
+    # Task objects) and dispatch/completion run over numpy slabs.  The span
+    # is exited — flushing slabs and materializing Task views — the moment
+    # anything object-observing appears, so behaviour stays bit-identical
+    # to the object path (tests/test_arena.py pins it differentially).
+    # Turn off to force the object path everywhere.
+    arena: bool = True
+    # recycle retired jobs' slab chunks (bounded-memory streaming): a job
+    # materialized after its chunk was recycled raises instead of lying
+    arena_recycle: bool = False
 
 
 def _unit_request(r) -> bool:
@@ -122,6 +143,39 @@ class _Wave:
         self.nodes = nodes      # per-task Node objects, from allocation
         self.pos = 0
         self.seq = seq
+
+
+class _ArenaWave:
+    """An arena-span dispatch wave: slab-backed, no Task objects.
+
+    Mirrors ``_Wave`` member for member but holds numpy arrays and (job,
+    run) descriptors instead of per-task objects.  ``clocks``/``ends_d``/
+    ``nids_d`` are in dispatch order (they become the slab writes at wave
+    retirement); ``ends``/``nids`` are in end order (the drain's bisect
+    bound and bulk free-slot release).  For ascending waves the two orders
+    coincide and the arrays are shared.  A span exit converts the wave into
+    a ``_Wave`` over materialized views (``converted``) and the pending
+    heap event — which kept its reserved ``seq`` — delegates to it.
+    """
+
+    __slots__ = ("runs", "clocks", "ends_d", "nids_d", "ends", "nids",
+                 "order", "mem_jobs", "mem_durs", "pos", "ri", "seq",
+                 "converted")
+
+    def __init__(self):
+        self.runs = None        # [(job, mstart, count, off0)] dispatch order
+        self.clocks = None      # f8, dispatch order
+        self.ends_d = None      # f8, dispatch order
+        self.nids_d = None      # i32, dispatch order
+        self.ends = None        # python list, end order (bisect)
+        self.nids = None        # i32, end order (free-stack release)
+        self.order = None       # end idx -> dispatch idx (None if ascending)
+        self.mem_jobs = None    # per-member job, end order (non-asc drain)
+        self.mem_durs = None    # per-member duration, end order (non-asc)
+        self.pos = 0            # drain cursor (end order)
+        self.ri = 0             # current run index (ascending drain)
+        self.seq = 0            # reserved event-loop tie-break sequence
+        self.converted = None   # _Wave after span exit
 
 
 class Scheduler:
@@ -199,6 +253,33 @@ class Scheduler:
         self.on_quarantine: Optional[Callable[[Task, float], None]] = None
         self.on_job_ready: Optional[Callable[[Job], None]] = None
         self.on_sweep: Optional[Callable[[float, List[int]], None]] = None
+        # ------- struct-of-arrays arena fast lane (core/arena.py) -------
+        # jobs on the lane live in _arena_q (a FIFO deque of lazy jobs,
+        # bypassing the QueueManager) and, while the *span* is active,
+        # dispatch/completion run over numpy slabs with the free-capacity
+        # stack as an int32 node-id array.  Any observer, fault event, or
+        # non-eligible job exits the span first (_exit_span), restoring
+        # the object path mid-run with identical semantics.
+        self._span = False
+        self._arena_q: Deque[Job] = collections.deque()
+        self._arena_jobs: Set[int] = set()
+        self._arena_waves: Set[_ArenaWave] = set()
+        self._arena_off = 0              # head-of-queue partial-fetch offset
+        self._fs = None                  # int32 free-slot stack (span mode)
+        self._fs_top = 0
+        if (self.config.arena and Arena is not None and self._fast
+                and executor is None):
+            self._arena = Arena(profile.startup_cost,
+                                self.config.arena_recycle)
+            self._arena._sch = self
+            # node-state mutations (death, drain, rejoin, slow, growth)
+            # must see flushed object state *before* they start
+            rm.on_pre_change(self._exit_span)
+            # a drained heap with arena residue still owes an exit (e.g.
+            # run() returning mid-span must leave consistent object state)
+            self.loop.add_source(self._arena_source)
+        else:
+            self._arena = None
         self.rm.on_node_down(self._node_down)
         self.rm.on_node_up(self._node_up)
         # executors that marshal completions through a thread-safe queue
@@ -210,7 +291,57 @@ class Scheduler:
     # ----------------------------------------------------------- submit
     def submit(self, job: Job) -> None:
         now = self.loop.now
-        self.sched_clock = max(self.sched_clock, now) + self.profile.submit_cost
+        sc = self.sched_clock
+        self.sched_clock = (sc if sc > now else now) + self.profile.submit_cost
+        if self._arena is not None:
+            spec = job._lazy
+            if (spec is not None and job._tasks is None and spec[0] > 0
+                    and not job.depends_on and job.priority == 0.0
+                    and job.queue == "default" and not job.parallel
+                    and len(self._active_jobs) == len(self._arena_jobs)
+                    and (spec[3] is _DEFAULT_REQ or _unit_request(spec[3]))
+                    and (c := self.config).wave_batching
+                    and not c.speculative
+                    and c.heartbeat_interval == 0.0
+                    and self.on_dispatch is None
+                    and self.on_dispatch_batch is None
+                    and self.on_complete is None):
+                # arena-lane admission, inline: scalar bookkeeping only —
+                # no Task objects, no QueueManager registration
+                # (``_exit_span`` adopts any still-queued lane job back
+                # into it).  Field for field the same admission state the
+                # object path leaves, minus the per-task walk (tasks are
+                # all WAITING/unit by construction) and the ``_cursor``/
+                # ``_unit`` entries (their reads default correctly).
+                jid = job.job_id
+                job.submit_time = now
+                job.state = JobState.QUEUED
+                self._arena_q.append(job)
+                self._arena_jobs.add(jid)
+                self._active_jobs[jid] = job
+                n = spec[0]
+                self._depth += n
+                self._pending += n
+                self._job_pending[jid] = n
+                self.stats[jid] = JobStats(job_id=jid, submit_time=now,
+                                           n_tasks=n)
+                # inlined _request_cycle (same dedup, minus call + max())
+                sc = self.sched_clock
+                t = (now if now > sc else sc) + self.profile.cycle_interval
+                nc = self._next_cycle
+                if nc is None or nc > t:
+                    self._next_cycle = t
+                    self.loop.at(t, self._cycle)
+                if self.on_submit is not None:
+                    self.on_submit(job)
+                if self.on_job_ready is not None:
+                    self.on_job_ready(job)   # eligible at submit (no deps)
+                return
+            if self._span or self._arena_q or self._arena_waves:
+                # a non-eligible job must never interleave with the lane:
+                # flush it back into the QueueManager first (FIFO-safe:
+                # lane jobs all predate this submit)
+                self._exit_span()
         # one fused admission walk: per-task submit-time stamping (on
         # behalf of qm.submit), the unit-job check (_is_unit), and the
         # policy pending counts (_count_in) — identical results, one pass
@@ -301,8 +432,24 @@ class Scheduler:
         if self.on_cycle is not None:
             self.on_cycle(self.loop.now, self._depth)
         if self._fast and self._all_unit():
-            self._cycle_fast()
+            if self._span:
+                if self._span_ok():
+                    self._cycle_arena()
+                else:
+                    self._exit_span()
+                    self._cycle_fast()
+            elif self._arena_q:
+                if (self._span_ok() and not self._running_tasks
+                        and not self._requeue and self._enter_span()):
+                    self._cycle_arena()
+                else:
+                    self._exit_span()
+                    self._cycle_fast()
+            else:
+                self._cycle_fast()
         else:
+            if self._span or self._arena_q or self._arena_waves:
+                self._exit_span()
             self._cycle_policy()
         if self.config.speculative:
             self._speculate()
@@ -800,6 +947,971 @@ class Scheduler:
         if pos < n:
             loop.at_seq(ends[pos], seq, self._finish_wave, batch)
 
+    # ------------------------------------------------- arena span (SoA)
+    # While the span holds, dispatch and completion never touch a Task or
+    # Node object: the free-capacity stack is an int32 node-id array, waves
+    # are numpy slab rows, and per-job state is a handful of scalars.  The
+    # span's *conditions* are exactly the wave path's plus "no per-member
+    # observers and no fault machinery in play" — everything the object
+    # drain handles per member (stale attempts, hidden-dead suppression,
+    # clone resolution, heartbeat stamping) is structurally impossible
+    # inside a span, because any event that could cause it exits the span
+    # first (ResourceManager.on_pre_change, non-eligible submits, config
+    # drift checks each cycle and each drain).
+
+    def _span_ok(self) -> bool:
+        c = self.config
+        rm = self.rm
+        return (c.wave_batching and not c.speculative
+                and c.heartbeat_interval == 0.0
+                and self.on_dispatch is None
+                and self.on_dispatch_batch is None
+                and self.on_complete is None
+                and not self._clones
+                and rm._hidden_dead == 0 and rm._slow_nodes == 0
+                and len(rm._up_ids) == len(rm.nodes))
+
+    def _enter_span(self) -> bool:
+        """Freeze the object free-slot stack into the numpy stack.
+
+        Replays the object path's claim loop (pop order, per-node remaining
+        counts) so stale entries die in exactly the same order; entry is
+        refused when the stack does not account for every free slot (the
+        cycle then runs the object path — identical either way)."""
+        rm = self.rm
+        stack = self._free_stack
+        ids: List[int] = []
+        if stack:
+            remaining: Dict[int, int] = {}
+            UP = NodeState.UP
+            for node in reversed(stack):          # pop order
+                nid = node.node_id
+                r = remaining.get(nid)
+                if r is None:
+                    r = node.free_slots if node.state is UP else 0
+                if r > 0:
+                    ids.append(nid)
+                    remaining[nid] = r - 1
+            ids.reverse()                         # ids[-1] pops first
+        else:
+            for node in rm.free_nodes():
+                ids.extend([node.node_id] * node.free_slots)
+        k = len(ids)
+        if k != rm._free_slots:
+            return False
+        need = rm._total_slots
+        if need < 1:
+            need = 1
+        fs = self._fs
+        if fs is None or len(fs) < need:
+            fs = self._fs = _np.empty(need, dtype=_np.int32)
+        if k:
+            fs[:k] = ids
+        self._fs_top = k
+        self._span = True
+        self._free_stack = []
+        return True
+
+    def _arena_source(self) -> bool:
+        """EventLoop refill source: a drained heap with arena residue owes
+        a span exit so ``run()`` returns with consistent object state."""
+        if self._span or self._arena_q or self._arena_waves:
+            self._exit_span()
+            return bool(self.loop._heap)
+        return False
+
+    def _cycle_arena(self) -> None:
+        """Span dispatch: the cross-job wave.  One contiguous slab of tasks
+        spanning many FIFO jobs, the same closed-form serial-clock prefix
+        sum as ``_cycle_wave``, zero Task/Node objects touched."""
+        depth0 = self._depth
+        if depth0 <= 0:
+            return
+        loop = self.loop
+        prof = self.profile
+        if (not loop._heap and not self._arena_waves and loop._running
+                and loop.until == float("inf") and self.on_cycle is None
+                and self.on_job_done is None and not self.qm._dependents
+                and prof.central_cost >= 0.0 and prof.queue_coeff >= 0.0
+                and prof.completion_cost >= 0.0
+                and prof.cycle_interval >= 0.0
+                and "_finish_arena" not in self.__dict__):
+            # the span owns the entire future: no pending events, no wave
+            # in flight, no observer or callback to fire — the whole lane
+            # backlog is a deterministic recurrence.  Fast-forward it.
+            return self._span_burst()
+        top = self._fs_top
+        limit = self.config.max_dispatch_per_cycle
+        cap = depth0 if not limit or depth0 < limit else limit
+        if cap > top:
+            cap = top
+        if cap <= 0:
+            return
+        q = self._arena_q
+        runs: List[Tuple[Job, int, int, int]] = []
+        m = 0
+        off = self._arena_off
+        while m < cap and q:
+            job = q[0]
+            if job._tasks is not None:
+                break       # externally materialized: not slab-dispatchable
+            avail = job._lazy[0] - off
+            take = cap - m
+            if take >= avail:
+                take = avail
+                q.popleft()
+                runs.append((job, m, take, off))
+                m += take
+                off = 0
+            else:
+                runs.append((job, m, take, off))
+                m += take
+                off += take
+                break
+        self._arena_off = off
+        if m == 0:
+            if q:           # materialized head blocks the lane: leave it
+                self._exit_span()
+                self._cycle_fast()
+            return
+        fs = self._fs
+        nids = fs[top - m:top][::-1].copy()       # dispatch (pop) order
+        self._fs_top = top - m
+        # -- closed-form serial clock, both arms bit-identical to the
+        # object wave path (skips are impossible on the lane: no requeue
+        # entries, no non-WAITING cursor ghosts)
+        prof = self.profile
+        cc = prof.central_cost
+        qc = prof.queue_coeff
+        su = prof.startup_cost
+        loop = self.loop
+        now = loop.now
+        s = self.sched_clock
+        if now > s:
+            s = now
+        if m >= self._WAVE_NUMPY:
+            d = _np.arange(depth0, depth0 - m, -1, dtype=_np.float64)
+            acc = _np.empty(m + 1)
+            acc[0] = s
+            acc[1:] = cc + qc * d
+            _np.cumsum(acc, out=acc)
+            clocks = acc[1:].copy()
+            s = float(clocks[m - 1])
+        else:
+            clocks = _np.empty(m)
+            for i in range(m):
+                s = s + (cc + qc * (depth0 - i))
+                clocks[i] = s
+        starts = clocks + su
+        ends_d = _np.empty(m)
+        arena = self._arena
+        jp = self._job_pending
+        stats = self.stats
+        cursor = self._cursor
+        QUEUED = JobState.QUEUED
+        for job, mstart, count, off0 in runs:
+            sl = slice(mstart, mstart + count)
+            nspec, duration, durations, _req = job._lazy
+            if durations is None:
+                ends_d[sl] = starts[sl] + duration
+            else:
+                ends_d[sl] = starts[sl] + _np.asarray(
+                    durations[off0:off0 + count], dtype=_np.float64)
+            if job._lo < 0:
+                arena.alloc(job, nspec)
+            job._filled = off0 + count
+            jid = job.job_id
+            cursor[jid] = off0 + count
+            jp[jid] = jp.get(jid, count) - count
+            if job.state is QUEUED:
+                job.state = JobState.RUNNING
+                st0 = stats[jid]
+                if st0.first_dispatch == 0.0:
+                    st0.first_dispatch = float(clocks[mstart])
+        self._pending -= m
+        self._depth -= m
+        self.dispatched += m
+        self.sched_clock = s
+        self.rm._free_slots -= m
+        # -- one coalesced completion event per wave (end order; stable
+        # sort matches the object path's sequence tie-break)
+        batch = _ArenaWave()
+        batch.runs = runs
+        batch.clocks = clocks
+        batch.ends_d = ends_d
+        batch.nids_d = nids
+        asc = True if m <= 1 else bool((ends_d[1:] >= ends_d[:-1]).all())
+        if asc:
+            batch.ends = ends_d.tolist()
+            batch.nids = nids
+        else:
+            order = _np.argsort(ends_d, kind="stable")
+            batch.order = order
+            batch.ends = ends_d[order].tolist()
+            batch.nids = nids[order]
+            djobs: List[Job] = [None] * m
+            ddurs: List[float] = [0.0] * m
+            for job, mstart, count, off0 in runs:
+                durations = job._lazy[2]
+                if durations is None:
+                    dur = job._lazy[1]
+                    for di in range(mstart, mstart + count):
+                        djobs[di] = job
+                        ddurs[di] = dur
+                else:
+                    for di in range(mstart, mstart + count):
+                        djobs[di] = job
+                        ddurs[di] = durations[off0 + di - mstart]
+            ol = order.tolist()
+            batch.mem_jobs = [djobs[di] for di in ol]
+            batch.mem_durs = [ddurs[di] for di in ol]
+        self._arena_waves.add(batch)
+        seq = loop.reserve_seq()
+        batch.seq = seq
+        loop.at_seq(batch.ends[0], seq, self._finish_arena, batch)
+
+    def _span_burst(self) -> None:
+        """Closed-form span fast-forward: drain the whole lane backlog in
+        one call.
+
+        Inside a pure span with an empty heap and no wave in flight, every
+        future micro-event — wave dispatches, member completions, cycle
+        pushes — is a deterministic recurrence over (serial clock, free-slot
+        stack, FIFO backlog): nothing external can interleave (any node or
+        config change exits the span first, and the gate in ``_cycle_arena``
+        requires that no observer, ``on_job_done`` hook, dependency edge, or
+        finite run horizon exists).  So instead of bouncing each ~10-member
+        sub-wave through the event loop, this simulates the exact same event
+        schedule — identical (time, seq) tie-breaks, identical float ops,
+        identical retire/need-cycle ordering — in one tight pass, writing
+        dispatch/end/node slabs in large contiguous chunks.  The loop's
+        sequence counter is kept in sync (every virtual wave and cycle push
+        reserves a real seq) and the clock lands on the same final value the
+        event-driven schedule reaches, so the scheduler, arena, and loop end
+        bit-identical to the un-fast-forwarded run."""
+        loop = self.loop
+        rm = self.rm
+        arena = self._arena
+        q = self._arena_q
+        jp = self._job_pending
+        cursor = self._cursor
+        stats = self.stats
+        finished = self.qm._finished
+        active = self._active_jobs
+        arena_jobs = self._arena_jobs
+        write_run = arena.write_run
+        adisp = arena._disp
+        arefs = arena._refs
+        prof = self.profile
+        cc = prof.central_cost
+        qc = prof.queue_coeff
+        su = prof.startup_cost
+        cpc = prof.completion_cost
+        ci = prof.cycle_interval
+        limit = self.config.max_dispatch_per_cycle
+        reserve = loop._seq.__next__          # reserve_seq, sans the call
+        heappush = heapq.heappush
+        heappop = heapq.heappop
+        bisect_left = bisect.bisect_left
+        bisect_right = bisect.bisect_right
+        QUEUED = JobState.QUEUED
+        RUNNINGJ = JobState.RUNNING
+        COMPLETED = JobState.COMPLETED
+
+        depth = self._depth
+        s = self.sched_clock
+        now = loop.now
+        free: List[int] = self._fs[:self._fs_top].tolist()
+        off = self._arena_off
+        dispatched = 0
+        completed = 0
+        wave_numpy = self._WAVE_NUMPY
+        retired: List[Job] = []
+        retired_app = retired.append
+        # slab write buffer: each wave contributes its (clocks, ends, nids)
+        # triple; rows are contiguous in dispatch order (alloc order ==
+        # dispatch order == tid order on the lane), concatenated and
+        # written in big chunks so the numpy assignment amortizes
+        parts: List[tuple] = []
+        parts_app = parts.append
+        buf_base = -1
+        buf_len = 0
+        next_cycle: Optional[float] = None   # self._next_cycle is None here
+        # virtual heap: (time, seq, wave-or-None); None = a cycle event.
+        # The sentinel replays the cycle currently firing (this call).
+        H: List[tuple] = [(now, -1, None)]
+        while H:
+            t_e, seq_e, w = heappop(H)
+            now = t_e
+            if w is None:
+                # ------------------------------- cycle: dispatch round
+                next_cycle = None
+                if depth <= 0:
+                    continue
+                cap = depth if not limit or depth < limit else limit
+                nfree = len(free)
+                if cap > nfree:
+                    cap = nfree
+                if cap <= 0:
+                    continue
+                if now > s:
+                    s = now
+                depth0 = depth
+                m = 0
+                runs: List[Tuple[Job, int, int, int]] = []
+                ends_w: List[float] = []
+                nids_w: List[int] = []
+                clocks_w: List[float] = []
+                e_app = ends_w.append
+                n_app = nids_w.append
+                c_app = clocks_w.append
+                pop_free = free.pop
+                asc = True
+                prev_e = float("-inf")
+                while m < cap and q:
+                    job = q[0]
+                    nspec, duration, durations, _req = job._lazy
+                    avail = nspec - off
+                    take = cap - m
+                    if take >= avail:
+                        take = avail
+                        q.popleft()
+                        newoff = 0
+                    else:
+                        newoff = off + take
+                    lo = job._lo
+                    if lo < 0:
+                        # inlined Arena.alloc fast path: the run fits one
+                        # resident chunk (the overwhelmingly common case)
+                        lo = arena._n
+                        c0 = lo >> _CHUNK_BITS
+                        if (c0 == (lo + nspec - 1) >> _CHUNK_BITS
+                                and c0 in adisp):
+                            arena._n = lo + nspec
+                            arefs[c0] += 1
+                            job._arena = arena
+                            job._lo = lo
+                        else:
+                            arena.alloc(job, nspec)
+                            lo = job._lo
+                    if buf_base < 0:
+                        buf_base = lo + off
+                    elif buf_base + buf_len + m != lo + off:
+                        # unreachable on the lane (alloc order == dispatch
+                        # order == tid order); a hole would silently mis-
+                        # place slab rows, so fail loudly instead
+                        raise RuntimeError(
+                            "arena span: non-contiguous slab run")
+                    if take >= wave_numpy:
+                        # numpy arm: per-run cumsum with the carried clock
+                        # is the same left-fold as the event path's whole-
+                        # wave cumsum (ufunc-sequential), bit for bit
+                        d = _np.arange(depth0 - m, depth0 - m - take, -1,
+                                       dtype=_np.float64)
+                        acc = _np.empty(take + 1)
+                        acc[0] = s
+                        acc[1:] = cc + qc * d
+                        _np.cumsum(acc, out=acc)
+                        clocks_a = acc[1:]
+                        s = float(clocks_a[take - 1])
+                        if durations is None:
+                            ends_a = (clocks_a + su) + duration
+                        else:
+                            ends_a = (clocks_a + su) + _np.asarray(
+                                durations[off:off + take],
+                                dtype=_np.float64)
+                        el = ends_a.tolist()
+                        if (el[0] < prev_e
+                                or not bool(
+                                    (ends_a[1:] >= ends_a[:-1]).all())):
+                            asc = False
+                        prev_e = el[take - 1]
+                        ends_w += el
+                        clocks_w += clocks_a.tolist()
+                        nds = free[-take:]
+                        del free[-take:]
+                        nds.reverse()
+                        nids_w += nds
+                    elif durations is None:
+                        # uniform duration + non-negative costs (the gate
+                        # requires them): ends are non-decreasing within
+                        # the run, so only the run boundary needs an
+                        # ascending check
+                        dm = depth0 - m
+                        s = s + (cc + qc * dm)
+                        e = (s + su) + duration
+                        if e < prev_e:
+                            asc = False
+                        c_app(s)
+                        e_app(e)
+                        n_app(pop_free())
+                        for k in range(1, take):
+                            s = s + (cc + qc * (dm - k))
+                            e = (s + su) + duration
+                            c_app(s)
+                            e_app(e)
+                            n_app(pop_free())
+                        prev_e = e
+                    else:
+                        dm = depth0 - m
+                        for k in range(take):
+                            s = s + (cc + qc * (dm - k))
+                            e = (s + su) + durations[off + k]
+                            if e < prev_e:
+                                asc = False
+                            prev_e = e
+                            c_app(s)
+                            e_app(e)
+                            n_app(pop_free())
+                    runs.append((job, m, take, off))
+                    # pending/cursor bookkeeping is skipped: the burst
+                    # retires every lane job, so those maps are bulk-
+                    # cleared at the end (same final state)
+                    if job.state is QUEUED:
+                        job.state = RUNNINGJ
+                        st0 = stats[job.job_id]
+                        if st0.first_dispatch == 0.0:
+                            st0.first_dispatch = clocks_w[m]
+                    m += take
+                    off = newoff
+                depth -= m
+                dispatched += m
+                parts_app((clocks_w, ends_w, nids_w))
+                buf_len += m
+                if asc:
+                    wave = [ends_w, nids_w, runs, None, 0, 0]
+                else:
+                    # stable end-order sort, exactly the event-driven tie
+                    # rule (equal ends keep dispatch order)
+                    djobs: List[Job] = [None] * m
+                    ddurs: List[float] = [0.0] * m
+                    for job, mstart, count, off0 in runs:
+                        durations = job._lazy[2]
+                        if durations is None:
+                            dur = job._lazy[1]
+                            for di in range(mstart, mstart + count):
+                                djobs[di] = job
+                                ddurs[di] = dur
+                        else:
+                            for di in range(mstart, mstart + count):
+                                djobs[di] = job
+                                ddurs[di] = durations[off0 + di - mstart]
+                    order = sorted(range(m), key=ends_w.__getitem__)
+                    ends_w = [ends_w[i] for i in order]
+                    nids_w = [nids_w[i] for i in order]
+                    wave = [ends_w, nids_w,
+                            [djobs[i] for i in order],
+                            [ddurs[i] for i in order], 0, -1]
+                heappush(H, (ends_w[0], reserve(), wave))
+                if buf_len >= 32768:
+                    # bounded-memory flush: retired (recycled) chunks are
+                    # skipped inside write_run
+                    fc: List[float] = []
+                    fe: List[float] = []
+                    fn: List[int] = []
+                    for pc, pe, pn in parts:
+                        fc += pc
+                        fe += pe
+                        fn += pn
+                    write_run(buf_base, fc, fe, fn, 2)
+                    buf_base += buf_len
+                    buf_len = 0
+                    del parts[:]
+            elif w[5] >= 0:
+                # --------------------- ascending wave: chunked drain
+                ends_w, nids_w, runs, _, pos, ri = w
+                nw = len(ends_w)
+                # fused resumption: the event path drains one member, then
+                # arms the next cycle from it — but with non-negative costs
+                # that arm time is max(s, e) + cpc + ci, known *before*
+                # draining, and a wave's head member is always drainable at
+                # its own pop (nothing in H can precede it).  Arm first,
+                # then sweep the whole bisect window in one chunk instead
+                # of a one-member chunk plus a second pass.
+                e = ends_w[pos]
+                t2 = ((s if s > e else e) + cpc) + ci
+                if next_cycle is None or next_cycle > t2:
+                    next_cycle = t2
+                    heappush(H, (t2, reserve(), None))
+                need_cycle = False
+                while pos < nw:
+                    job, mstart, count, off0 = runs[ri]
+                    run_end = mstart + count
+                    hi = run_end
+                    if H:
+                        h0 = H[0]
+                        bt = h0[0]
+                        if seq_e > h0[1]:
+                            hb = bisect_left(ends_w, bt, pos, hi)
+                        else:
+                            hb = bisect_right(ends_w, bt, pos, hi)
+                        if hb < hi:
+                            hi = hb
+                    if hi <= pos:
+                        break
+                    st0 = stats[job.job_id]
+                    tsv = st0.task_seconds
+                    durations = job._lazy[2]
+                    if durations is None:
+                        dur = job._lazy[1]
+                        for e in ends_w[pos:hi]:
+                            s = (s if s > e else e) + cpc
+                            tsv += dur
+                    else:
+                        dbase = off0 - mstart
+                        for i in range(pos, hi):
+                            e = ends_w[i]
+                            s = (s if s > e else e) + cpc
+                            tsv += durations[dbase + i]
+                    st0.task_seconds = tsv
+                    k = hi - pos
+                    if e > st0.last_end:
+                        st0.last_end = e
+                    job.completed_tasks += k
+                    free += nids_w[pos:hi]
+                    completed += k
+                    pos = hi
+                    if pos == run_end:
+                        ri += 1
+                        if job.completed_tasks >= job._lazy[0]:
+                            job.state = COMPLETED
+                            job.end_time = e
+                            job._filled = job._lazy[0]
+                            retired_app(job)
+                            need_cycle = True
+                    if need_cycle:
+                        t2 = (e if e > s else s) + ci
+                        if next_cycle is None or next_cycle > t2:
+                            next_cycle = t2
+                            heappush(H, (t2, reserve(), None))
+                        need_cycle = False
+                w[4] = pos
+                w[5] = ri
+                if pos < nw:
+                    heappush(H, (ends_w[pos], seq_e, w))
+            else:
+                # ------------------- non-ascending wave: per-member drain
+                ends_w, nids_w, mem_jobs, mem_durs, pos, _ = w
+                nw = len(ends_w)
+                need_cycle = True
+                while pos < nw:
+                    e = ends_w[pos]
+                    if H:
+                        h0 = H[0]
+                        if e > h0[0] or (e == h0[0] and seq_e > h0[1]):
+                            break
+                    job = mem_jobs[pos]
+                    s = (s if s > e else e) + cpc
+                    free.append(nids_w[pos])
+                    completed += 1
+                    c = job.completed_tasks + 1
+                    job.completed_tasks = c
+                    st0 = stats[job.job_id]
+                    st0.task_seconds += mem_durs[pos]
+                    if e > st0.last_end:
+                        st0.last_end = e
+                    pos += 1
+                    if c >= job._lazy[0]:
+                        job.state = COMPLETED
+                        job.end_time = e
+                        job._filled = job._lazy[0]
+                        retired_app(job)
+                        need_cycle = True
+                    if need_cycle:
+                        t2 = (e if e > s else s) + ci
+                        if next_cycle is None or next_cycle > t2:
+                            next_cycle = t2
+                            heappush(H, (t2, reserve(), None))
+                        need_cycle = False
+                w[4] = pos
+                if pos < nw:
+                    heappush(H, (ends_w[pos], seq_e, w))
+        # ------------------------------------------------ final flush
+        if buf_len:
+            if len(parts) == 1:
+                fc, fe, fn = parts[0]
+            else:
+                fc, fe, fn = [], [], []
+                for pc, pe, pn in parts:
+                    fc += pc
+                    fe += pe
+                    fn += pn
+            write_run(buf_base, fc, fe, fn, 2)
+        if retired:
+            # vectorized whole-job retirement: the burst completed every
+            # lane job (and the span invariant says active == lane), so
+            # the per-job map pops collapse to bulk clears and the per-
+            # chunk ref decrements to one arena sweep
+            for job in retired:
+                finished[job.job_id] = COMPLETED
+            jp.clear()
+            cursor.clear()
+            arena_jobs.clear()
+            active.clear()
+            arena.release_span()
+        self._depth = depth
+        self._pending -= dispatched
+        self.dispatched += dispatched
+        self.completed += completed
+        self.sched_clock = s
+        self._arena_off = off
+        k = len(free)
+        if k:
+            self._fs[:k] = free
+        self._fs_top = k
+        loop.advance(now)
+
+    def _finish_arena(self, batch: "_ArenaWave") -> None:
+        """Span drain: ``_finish_wave`` over slab rows.  Same yield bounds,
+        same deferred-scalar discipline, same retire/need-cycle ordering —
+        minus the per-member fault guards (structurally impossible here).
+        Ascending waves drain in per-run *chunks*: one fused scalar loop for
+        the completion-cost recurrence and task-seconds sum, one numpy slice
+        for the free-slot release, per-job bookkeeping once per chunk."""
+        if batch.converted is not None:
+            return self._finish_wave(batch.converted)
+        loop = self.loop
+        if not loop._running:
+            return
+        if (self.on_complete is not None or self.config.speculative
+                or self._clones or self.rm._hidden_dead
+                or self.config.heartbeat_interval > 0.0):
+            # config drifted since dispatch: hand the wave to the object
+            # drain (conversion flushes slabs and materializes views)
+            self._exit_span()
+            return self._finish_wave(batch.converted)
+        ends = batch.ends
+        nids = batch.nids
+        runs = batch.runs
+        pos = batch.pos
+        ri = batch.ri
+        n = len(ends)
+        seq = batch.seq
+        heap = loop._heap
+        until = loop.until
+        rm = self.rm
+        qm = self.qm
+        prof = self.profile
+        completion_cost = prof.completion_cost
+        cycle_interval = prof.cycle_interval
+        fs = self._fs
+        top = self._fs_top
+        stats = self.stats
+        jp = self._job_pending
+        COMPLETED = JobState.COMPLETED
+        # deferred scalars (flushed at yields and around _retire)
+        s = self.sched_clock
+        ccount = 0
+        freed = 0
+        last_e = loop.now
+        if heap:
+            h0 = heap[0]
+            btime = h0[0]
+            bseq = h0[1]
+        else:
+            btime = until
+            bseq = seq + 1               # nothing queued: never ties
+        need_cycle = True
+        if batch.order is None:
+            # ---------------- ascending: chunked per-run drain
+            while pos < n:
+                job, mstart, count, off0 = runs[ri]
+                run_end = mstart + count
+                # while a cycle push is owed, chunks are single members
+                # (the push must fire right after that member, as the
+                # per-member path does)
+                hi = pos + 1 if need_cycle else run_end
+                if seq > bseq:
+                    hb = bisect.bisect_left(ends, btime, pos, hi)
+                else:
+                    hb = bisect.bisect_right(ends, btime, pos, hi)
+                if hb < hi:
+                    hi = hb
+                hu = bisect.bisect_right(ends, until, pos, hi)
+                if hu < hi:
+                    hi = hu
+                if hi <= pos:
+                    break                # a real event interleaves: yield
+                st0 = stats[job.job_id]
+                tsv = st0.task_seconds
+                durations = job._lazy[2]
+                if durations is None:
+                    dur = job._lazy[1]
+                    for i in range(pos, hi):
+                        e = ends[i]
+                        s = (s if s > e else e) + completion_cost
+                        tsv += dur
+                else:
+                    dbase = off0 - mstart
+                    for i in range(pos, hi):
+                        e = ends[i]
+                        s = (s if s > e else e) + completion_cost
+                        tsv += durations[dbase + i]
+                st0.task_seconds = tsv
+                k = hi - pos
+                e = ends[hi - 1]
+                if e > st0.last_end:
+                    st0.last_end = e
+                job.completed_tasks += k
+                fs[top:top + k] = nids[pos:hi]
+                top += k
+                freed += k
+                ccount += k
+                last_e = e
+                pos = hi
+                if pos == run_end:
+                    ri += 1
+                    if job.completed_tasks >= job._lazy[0]:
+                        jid = job.job_id
+                        if self.on_job_done is None and not qm._dependents:
+                            # inline _retire (span form: depth delta is 0,
+                            # no deps, no unit/nonunit entry, no observer)
+                            qm._finished[jid] = COMPLETED
+                            job.state = COMPLETED
+                            job.end_time = e
+                            jp.pop(jid, None)
+                            self._cursor.pop(jid, None)
+                            self._arena_jobs.discard(jid)
+                            del self._active_jobs[jid]
+                            self._arena.release(job)
+                        else:
+                            batch.pos = pos
+                            batch.ri = ri
+                            loop.advance(e)
+                            self.sched_clock = s
+                            rm._free_slots += freed
+                            freed = 0
+                            self.completed += ccount
+                            ccount = 0
+                            self._fs_top = top
+                            self._retire(job, COMPLETED, e)
+                            if batch.converted is not None:
+                                # on_job_done submitted a non-eligible job:
+                                # the span is gone and this very wave was
+                                # converted mid-drain — delegate
+                                w = batch.converted
+                                if loop._running:
+                                    return self._finish_wave(w)
+                                if w.pos < n:
+                                    loop.at_seq(w.ends[w.pos], seq,
+                                                self._finish_wave, w)
+                                return
+                            if not loop._running:
+                                break
+                            s = self.sched_clock
+                            top = self._fs_top
+                            if heap:
+                                h0 = heap[0]
+                                btime = h0[0]
+                                bseq = h0[1]
+                            else:
+                                btime = until
+                                bseq = seq + 1
+                        need_cycle = True
+                if need_cycle:
+                    t = (e if e > s else s) + cycle_interval
+                    nc = self._next_cycle
+                    if nc is None or nc > t:
+                        self._next_cycle = t
+                        loop.at(t, self._cycle)
+                        h0 = heap[0]
+                        btime = h0[0]
+                        bseq = h0[1]
+                    need_cycle = False
+        else:
+            # ---------------- non-ascending: per-member drain
+            mem_jobs = batch.mem_jobs
+            mem_durs = batch.mem_durs
+            while pos < n:
+                e = ends[pos]
+                if e > btime or (e == btime and seq > bseq):
+                    break
+                if e > until:
+                    break
+                job = mem_jobs[pos]
+                s = (s if s > e else e) + completion_cost
+                fs[top] = nids[pos]
+                top += 1
+                freed += 1
+                ccount += 1
+                last_e = e
+                c = job.completed_tasks + 1
+                job.completed_tasks = c
+                st0 = stats[job.job_id]
+                st0.task_seconds += mem_durs[pos]
+                if e > st0.last_end:
+                    st0.last_end = e
+                pos += 1
+                if c >= job._lazy[0]:
+                    jid = job.job_id
+                    if self.on_job_done is None and not qm._dependents:
+                        qm._finished[jid] = COMPLETED
+                        job.state = COMPLETED
+                        job.end_time = e
+                        jp.pop(jid, None)
+                        self._cursor.pop(jid, None)
+                        self._arena_jobs.discard(jid)
+                        del self._active_jobs[jid]
+                        self._arena.release(job)
+                    else:
+                        batch.pos = pos
+                        loop.advance(e)
+                        self.sched_clock = s
+                        rm._free_slots += freed
+                        freed = 0
+                        self.completed += ccount
+                        ccount = 0
+                        self._fs_top = top
+                        self._retire(job, COMPLETED, e)
+                        if batch.converted is not None:
+                            w = batch.converted
+                            if loop._running:
+                                return self._finish_wave(w)
+                            if w.pos < n:
+                                loop.at_seq(w.ends[w.pos], seq,
+                                            self._finish_wave, w)
+                            return
+                        if not loop._running:
+                            break
+                        s = self.sched_clock
+                        top = self._fs_top
+                        if heap:
+                            h0 = heap[0]
+                            btime = h0[0]
+                            bseq = h0[1]
+                        else:
+                            btime = until
+                            bseq = seq + 1
+                    need_cycle = True
+                if need_cycle:
+                    t = (e if e > s else s) + cycle_interval
+                    nc = self._next_cycle
+                    if nc is None or nc > t:
+                        self._next_cycle = t
+                        loop.at(t, self._cycle)
+                        h0 = heap[0]
+                        btime = h0[0]
+                        bseq = h0[1]
+                    need_cycle = False
+        # flush deferred state
+        self.sched_clock = s
+        self.completed += ccount
+        rm._free_slots += freed
+        loop.advance(last_e)
+        self._fs_top = top
+        batch.pos = pos
+        batch.ri = ri
+        if pos < n:
+            loop.at_seq(ends[pos], seq, self._finish_arena, batch)
+        else:
+            # wave fully drained: retire it to the slabs (a handful of
+            # slice writes; recycled chunks of already-released jobs are
+            # skipped inside write_run)
+            self._arena_waves.discard(batch)
+            arena = self._arena
+            clocks = batch.clocks
+            ends_d = batch.ends_d
+            nids_d = batch.nids_d
+            for job, mstart, count, off0 in batch.runs:
+                arena.write_run(job._lo + off0,
+                                clocks[mstart:mstart + count],
+                                ends_d[mstart:mstart + count],
+                                nids_d[mstart:mstart + count], 2)
+
+    def _exit_span(self) -> None:
+        """Leave the arena span, restoring full object state mid-run.
+
+        Idempotent; a no-op without arena residue.  In order: flush every
+        in-flight wave's slab rows (per-member states), materialize Task
+        views for the jobs those waves still own, rebuild Node-level
+        occupancy and the object free-slot stack from the numpy stack,
+        convert in-flight ``_ArenaWave``s to ``_Wave``s (their pending heap
+        events — original seq preserved — delegate), and adopt still-queued
+        lane jobs back into the QueueManager in FIFO order."""
+        if not (self._span or self._arena_waves or self._arena_q):
+            return
+        span = self._span
+        rm = self.rm
+        arena = self._arena
+        active = self._active_jobs
+        waves = list(self._arena_waves)
+        # (1) slab flush: completed members state 2, in-flight state 1
+        for b in waves:
+            nb = len(b.ends)
+            st = _np.ones(nb, dtype=_np.uint8)
+            if b.pos:
+                if b.order is None:
+                    st[:b.pos] = 2
+                else:
+                    st[b.order[:b.pos]] = 2
+            for job, mstart, count, off0 in b.runs:
+                arena.write_run(job._lo + off0,
+                                b.clocks[mstart:mstart + count],
+                                b.ends_d[mstart:mstart + count],
+                                b.nids_d[mstart:mstart + count],
+                                st[mstart:mstart + count])
+        # (2) materialize views for live wave jobs (retired ones need no
+        # objects: no live members, and their slabs are complete)
+        for b in waves:
+            for job, _, _, _ in b.runs:
+                if job.job_id in active and job._tasks is None:
+                    arena._build_tasks(job)
+        running = self._running_tasks
+        nodes = rm.nodes
+        if span:
+            # (3) Node-level occupancy: only span members can be running
+            # (entry required an empty running set), so reset and re-add
+            for node in nodes.values():
+                node.free_slots = node.slots
+                node.running.clear()
+        # (4) convert in-flight waves to object waves
+        for b in waves:
+            nb = len(b.ends)
+            dtasks: List[Optional[Task]] = [None] * nb
+            for job, mstart, count, off0 in b.runs:
+                if job.job_id in active:
+                    jts = job._tasks
+                    base = off0 - mstart
+                    for di in range(mstart, mstart + count):
+                        dtasks[di] = jts[base + di]
+            if b.order is None:
+                etasks = dtasks
+            else:
+                etasks = [dtasks[di] for di in b.order.tolist()]
+            enids = b.nids.tolist()
+            wnodes = [nodes[nid] for nid in enids]
+            keys = [(-1, -1) if t is None else (t.job_id, t.index)
+                    for t in etasks]
+            for e in range(b.pos, nb):
+                task = etasks[e]
+                key = keys[e]
+                node = wnodes[e]
+                node.free_slots -= 1
+                node.running.add(key)
+                running[key] = task
+            w = _Wave(etasks, b.ends, [1] * nb, keys, wnodes, b.seq)
+            w.pos = b.pos
+            b.converted = w
+        if span:
+            # (5) aggregates: counters stayed exact; index/cache did not
+            rm._index_dirty.update(nodes.keys())
+            rm._free_cache = None
+            # (6) object free-slot stack from the numpy stack (same order)
+            self._free_stack = [nodes[i]
+                                for i in self._fs[:self._fs_top].tolist()]
+        # (7) still-queued lane jobs rejoin the QueueManager (deque order
+        # == submit order == FIFO dispatch order; a partially-fetched head
+        # resumes at its _cursor offset)
+        qm = self.qm
+        for job in self._arena_q:
+            qm.adopt(job, job.submit_time)
+        self._arena_q.clear()
+        self._arena_jobs.clear()
+        self._arena_waves.clear()
+        self._arena_off = 0
+        self._span = False
+        self._fs_top = 0
+
     def _cycle_policy(self) -> None:
         self._free_stack = []  # invalidated by generic allocation
         self.rm.sync_index()   # reconcile any deferred wave-path updates
@@ -986,7 +2098,10 @@ class Scheduler:
         if not self._unit.pop(job.job_id, True):
             self._nonunit -= 1
         self._cursor.pop(job.job_id, None)
+        self._arena_jobs.discard(job.job_id)
         del self._active_jobs[job.job_id]
+        if job._lo >= 0 and job._arena is not None:
+            job._arena.release(job)
         if self.on_job_done is not None:
             self.on_job_done(job)
 
@@ -1122,6 +2237,8 @@ class Scheduler:
         if given and the task has since moved on, this is a no-op.
         Returns True when the attempt was actually reclaimed.
         """
+        if self._span or self._arena_q or self._arena_waves:
+            self._exit_span()      # lease machinery needs object state
         if task.state is not TaskState.RUNNING:
             return False
         if attempt is not None and task.attempts != attempt:

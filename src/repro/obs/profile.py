@@ -35,9 +35,11 @@ _PHASE_OF = (
     ("submit", "admission"),
     ("_cycle", "cycle"),
     ("_cycle_wave", "dispatch"),
+    ("_cycle_arena", "dispatch"),
     ("_dispatch", "dispatch"),
     ("_task_end", "completion"),
     ("_finish_wave", "completion"),
+    ("_finish_arena", "completion"),
     ("_heartbeat_sweep", "sweep"),
 )
 

@@ -1,0 +1,288 @@
+"""Arena-vs-object differential suite: the struct-of-arrays fast lane must
+be observably bit-identical to the object paths.
+
+Every scenario family from the wave-path suite runs through three engines —
+per-event objects (``wave_batching=False, arena=False``), wave-batched
+objects (``arena=False``), and the arena lane (``arena=True``, Task/Job as
+lazily materialized slab views) — and is compared on every observable:
+per-task timestamps/states/attempts/placement (materialized *through* the
+arena views), per-job ``JobStats``, dispatch/completed counters, the serial
+scheduler clock, the virtual clock, resource counters, pending-depth
+accounting, and (when observers are attached) the dispatch event order, the
+MetricsTap summary, and the FlightRecorder event stream.
+
+Observer-attached runs also pin the fallback contract: any object-observing
+hook keeps eligible jobs off the lane (or exits the span), so the arena
+config must degrade to the object path without a bit of drift.
+
+The memory-bound test streams >= 100k jobs through a recycling arena and
+asserts the O(active)-views property: no job is ever materialized, resident
+slab chunks stay bounded by the active window, and the injector's peak
+active-job count honours its cap.
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    Job, LatencyProfile, ResourceManager, Scheduler, SchedulerConfig)
+from repro.obs import FlightRecorder
+from repro.workloads import MetricsTap, StreamingInjector
+from repro.workloads.spec import JobSpec
+from repro.workloads.synthetic import FAMILIES as WL_FAMILIES
+
+FAST = LatencyProfile(name="fast", central_cost=1e-4, queue_coeff=1e-9,
+                      completion_cost=1e-5, startup_cost=1e-3,
+                      cycle_interval=1e-3)
+
+MODES = {
+    "event": dict(wave_batching=False, arena=False),
+    "wave": dict(wave_batching=True, arena=False),
+    "arena": dict(wave_batching=True, arena=True),
+}
+
+
+class RecordingTap:
+    """Orders dispatch observations identically from either hook."""
+
+    def __init__(self, sch):
+        self.events = []
+        sch.on_dispatch = self._one
+        sch.on_dispatch_batch = self._many
+
+    def _one(self, task, depth):
+        self.events.append((task.job_id, task.index, depth))
+
+    def _many(self, tasks, depths):
+        self.events.extend(
+            (t.job_id, t.index, d) for t, d in zip(tasks, depths))
+
+
+def engine_signature(s, jobs, idmap=None):
+    """Every observable the paths must agree on, with job ids normalized
+    (the global job-id counter differs between runs).  Reading ``j.tasks``
+    on an arena run materializes the slab views — the comparison covers the
+    view-materialization contract, not just the counters."""
+    idmap = idmap or {j.job_id: i for i, j in enumerate(jobs)}
+    return {
+        "tasks": [(idmap[t.job_id], t.index, t.state, t.node_id, t.attempts,
+                   t.submit_time, t.dispatch_time, t.start_time, t.end_time)
+                  for j in jobs for t in j.tasks],
+        "jobs": [(idmap[j.job_id], j.state, j.completed_tasks,
+                  j.failed_tasks, j.n_clones, j.end_time) for j in jobs],
+        "stats": {idmap[k]: (v.submit_time, v.first_dispatch, v.last_end,
+                             v.task_seconds, v.n_tasks)
+                  for k, v in s.stats.items() if k in idmap},
+        "counters": (s.dispatched, s.completed, s.sched_clock, s.loop.now,
+                     s.rm.free_slots(), s.rm.total_slots(), s._depth,
+                     s._pending, s._pending_zero),
+    }
+
+
+def run_scenario(mode, *, seed=0, nodes=12, slots=1, n_jobs=40, fail=(),
+                 rejoin=(), cap=0, prio=False, mixed=False, stepped=0.0,
+                 deps=False, zero_dur=False, record=False):
+    rng = random.Random(seed)
+    rm = ResourceManager()
+    rm.add_nodes(nodes, slots=slots)
+    cfg = SchedulerConfig(max_dispatch_per_cycle=cap, **MODES[mode])
+    s = Scheduler(rm, profile=FAST, config=cfg)
+    tap = RecordingTap(s) if record else None
+    jobs = []
+    for i in range(n_jobs):
+        n = rng.randint(1, 6)
+        if zero_dur:
+            durs = [0.0 if rng.random() < 0.5 else 0.25 for _ in range(n)]
+        elif mixed:
+            durs = [rng.random() * 2 for _ in range(n)]
+        else:
+            durs = [0.5] * n
+        j = Job.array(n, durations=durs,
+                      priority=float(rng.randint(0, 3)) if prio else 0.0)
+        j.max_restarts = 2
+        if deps and jobs and rng.random() < 0.3:
+            j.depends_on = (rng.choice(jobs).job_id,)
+        jobs.append(j)
+        s.submit(j)
+    s.loop.at_many(
+        [(t_fail, s.fail_node, (nid,)) for t_fail, nid in fail]
+        + [(t_up, rm.heartbeat, (nid, t_up)) for t_up, nid in rejoin])
+    if stepped:
+        until = 0.0
+        for _ in range(40):
+            until += stepped
+            s.run(until=until)
+    s.run()
+    sig = engine_signature(s, jobs)
+    if tap is not None:
+        idmap = {j.job_id: i for i, j in enumerate(jobs)}
+        sig["dispatch_order"] = [(idmap[a], b, c) for a, b, c in tap.events]
+    return sig
+
+
+SCENARIOS = {
+    "plain": {},
+    "node_failure_mid_wave": {"fail": ((1.3, 3), (2.7, 7)),
+                              "rejoin": ((5.0, 3),)},
+    "dispatch_cap": {"cap": 3},
+    "priorities": {"prio": True},
+    "mixed_durations": {"mixed": True},
+    "zero_duration_ties": {"zero_dur": True},
+    "stepped_until": {"stepped": 0.37},
+    "dependencies": {"deps": True},
+    "kitchen_sink": {"fail": ((1.3, 3), (2.7, 7)), "rejoin": ((5.0, 3),),
+                     "cap": 5, "prio": True, "mixed": True, "deps": True,
+                     "stepped": 0.41},
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_arena_matches_per_event(name, seed):
+    """Lane engaged (no observers): slab dispatch + view materialization
+    must reproduce the per-event object path bit for bit."""
+    kw = SCENARIOS[name]
+    a = run_scenario("event", seed=seed, **kw)
+    b = run_scenario("arena", seed=seed, **kw)
+    assert a == b
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_arena_observer_fallback_matches(name):
+    """Dispatch observers attached: the lane must stand down (jobs admit
+    through the object path) and the event order must match exactly."""
+    kw = SCENARIOS[name]
+    a = run_scenario("event", seed=0, record=True, **kw)
+    b = run_scenario("arena", seed=0, record=True, **kw)
+    assert a == b
+
+
+def test_arena_matches_object_wave():
+    """Three-way anchor: arena == object wave == per-event on the plain
+    and mixed families (the two dispatch-arm shapes)."""
+    for kw in ({}, {"mixed": True}):
+        sigs = [run_scenario(m, seed=4, **kw) for m in MODES]
+        assert sigs[0] == sigs[1] == sigs[2]
+
+
+def test_arena_numpy_arm_matches_per_event():
+    """Waves >= 64 tasks take the numpy prefix-sum arm inside the span
+    burst; the floats must still match the sequential recurrence."""
+    for kw in ({"nodes": 128, "n_jobs": 8},
+               {"nodes": 96, "n_jobs": 30},
+               {"nodes": 96, "n_jobs": 30, "mixed": True}):
+        assert run_scenario("event", seed=11, **kw) == \
+            run_scenario("arena", seed=11, **kw)
+
+
+def test_arena_uniform_burst_fifo():
+    """The pure-FIFO uniform regime (the benchmark shape: every job
+    identical, no hooks, one run() to completion) drives the closed-form
+    span burst; compare against per-event at a few widths."""
+    for width, n_jobs in ((1, 200), (4, 120), (16, 40)):
+        sigs = {}
+        for mode in ("event", "arena"):
+            rm = ResourceManager()
+            rm.add_nodes(24)
+            s = Scheduler(rm, profile=FAST,
+                          config=SchedulerConfig(**MODES[mode]))
+            jobs = [Job.array(width, 0.5) for _ in range(n_jobs)]
+            for j in jobs:
+                s.submit(j)
+            s.run()
+            sigs[mode] = engine_signature(s, jobs)
+        assert sigs["event"] == sigs["arena"], (width, n_jobs)
+
+
+# ---------------------------------------------------------------- streaming
+def _stream_run(mode, family, seed=3, tap=False):
+    rm = ResourceManager()
+    rm.add_nodes(32, slots=1)
+    if family == "license_mix":
+        rm.add_license("lic", 4)
+    s = Scheduler(rm, profile=FAST, config=SchedulerConfig(**MODES[mode]))
+    mt = MetricsTap() if tap else None
+    inj = StreamingInjector(s, WL_FAMILIES[family](seed, 60, 32),
+                            max_active_jobs=8, tap=mt)
+    inj.run()
+    assert inj.drained
+    return {
+        "tap": mt.summary() if mt else None,
+        "counters": (s.dispatched, s.completed, s.sched_clock, s.loop.now),
+        "stats": sorted((v.submit_time, v.first_dispatch, v.last_end,
+                         v.task_seconds, v.n_tasks)
+                        for v in s.stats.values()),
+        "stream": (inj.submitted_jobs, inj.submitted_tasks,
+                   inj.peak_active_jobs),
+    }
+
+
+@pytest.mark.parametrize("family", ["poisson", "bursty",
+                                    "heavy_tail", "mapreduce"])
+def test_arena_streaming_differential(family):
+    """Injector-fed streaming (arrival coalescing, ``on_job_done``
+    backpressure — the non-burst arena span) matches per-event."""
+    assert _stream_run("event", family) == _stream_run("arena", family)
+
+
+def test_arena_streaming_tap_summary_matches():
+    """With a MetricsTap attached the lane stands down; the tap's
+    latency/depth/utilization series must be identical."""
+    a = _stream_run("event", "poisson", tap=True)
+    b = _stream_run("arena", "poisson", tap=True)
+    assert a == b
+
+
+def test_arena_recorder_stream_matches():
+    """FlightRecorder event streams (submit/ready/dispatch/complete/done
+    order and payloads) are identical through the arena config."""
+    streams = {}
+    for mode in ("event", "arena"):
+        rng = random.Random(5)
+        rm = ResourceManager()
+        rm.add_nodes(16)
+        s = Scheduler(rm, profile=FAST,
+                      config=SchedulerConfig(**MODES[mode]))
+        rec = FlightRecorder().attach(s)
+        jobs = []
+        for _ in range(30):
+            n = rng.randint(1, 6)
+            j = Job.array(n, durations=[rng.random() for _ in range(n)])
+            jobs.append(j)
+            s.submit(j)
+        s.run()
+        idmap = {j.job_id: i for i, j in enumerate(jobs)}
+        streams[mode] = rec.events_normalized(idmap)
+    assert streams["event"] == streams["arena"]
+
+
+# ------------------------------------------------------------ memory bound
+def _unit_stream(n_jobs):
+    t = 0.0
+    for _ in range(n_jobs):
+        t += 0.004
+        yield JobSpec(arrival=t, n_tasks=2, duration=0.05)
+
+
+def test_arena_bounded_memory_at_100k_streamed_jobs():
+    """O(active) materialized views on a >= 100k-job stream: with
+    ``arena_recycle`` on, no Task view is ever built, resident slab chunks
+    track the active window (not the trace), and the injector cap holds."""
+    rm = ResourceManager()
+    rm.add_nodes(64)
+    s = Scheduler(rm, profile=FAST,
+                  config=SchedulerConfig(arena=True, arena_recycle=True))
+    inj = StreamingInjector(s, _unit_stream(100_000), max_active_jobs=32)
+    inj.run()
+    assert inj.drained
+    assert s.completed == 200_000
+    arena = s._arena
+    assert arena is not None
+    # nothing in this run observes tasks -> zero views materialized
+    assert arena.materialized_jobs <= inj.peak_active_jobs
+    assert inj.peak_active_jobs <= 32
+    # recycling keeps resident chunks O(active window), not O(trace):
+    # 200k task ids cross ~7 chunks; all but the active tail must be freed
+    resident = len(arena._disp)
+    assert resident <= 2, resident
+    assert len(arena._freed) >= 4
